@@ -1,0 +1,85 @@
+"""Shared benchmark helpers: small-scale training harnesses + CSV output.
+
+The paper's experiments are ResNet/ImageNet-scale; this container is one
+CPU core, so every accuracy benchmark runs the same *protocol* at reduced
+scale (reduced ResNet on a learnable synthetic image task / tiny LM on the
+arithmetic token task).  Scale knobs: REPRO_BENCH_STEPS / REPRO_BENCH_FAST.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import preset
+from repro.core.qconfig import QConfig
+from repro.data import ImageTask, TokenTask
+from repro.launch.train import make_train_step
+from repro.models import build_model
+from repro.optim import init_momentum
+
+
+def steps_default(n: int) -> int:
+    if os.environ.get("REPRO_BENCH_FAST"):
+        return max(8, n // 8)
+    return int(os.environ.get("REPRO_BENCH_STEPS", n))
+
+
+RESNET_BENCH = ArchConfig(name="resnet-bench", family="resnet",
+                          block="basic", stage_sizes=(1, 1),
+                          num_classes=8, img_size=16)
+
+LM_BENCH = ArchConfig(name="lm-bench", family="lm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv=2, d_ff=128, vocab=64, head_dim=16,
+                      q_chunk=32, kv_chunk=32)
+
+
+def train_resnet(qcfg: QConfig, steps: int, batch: int = 64, lr: float = 0.05,
+                 seed: int = 0, eval_batches: int = 4):
+    model = build_model(RESNET_BENCH, qcfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = init_momentum(params)
+    labels = model.labels(params)
+    step_fn = jax.jit(make_train_step(model, qcfg, labels, lr=lr))
+    task = ImageTask(img_size=16, num_classes=8, global_batch=batch, seed=1)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        b = jax.tree.map(jnp.asarray, task.batch(s))
+        params, opt, m = step_fn(params, opt, b, jnp.int32(s))
+        losses.append(float(m["loss"]))
+    # held-out accuracy (fresh steps the model never trained on)
+    accs = []
+    fwd = jax.jit(lambda p, b: model.loss(p, b)[1]["acc"])
+    for s in range(10_000, 10_000 + eval_batches):
+        b = jax.tree.map(jnp.asarray, task.batch(s))
+        accs.append(float(fwd(params, b)))
+    return {"losses": losses, "acc": float(np.mean(accs)),
+            "wall_s": time.time() - t0, "params": params, "model": model}
+
+
+def train_lm(qcfg: QConfig, steps: int, batch: int = 8, seq: int = 32,
+             lr: float = 0.05, seed: int = 0):
+    model = build_model(LM_BENCH, qcfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = init_momentum(params)
+    labels = model.labels(params)
+    step_fn = jax.jit(make_train_step(model, qcfg, labels, lr=lr))
+    task = TokenTask(vocab=LM_BENCH.vocab, seq_len=seq, global_batch=batch)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        b = jax.tree.map(jnp.asarray, task.batch(s))
+        params, opt, m = step_fn(params, opt, b, jnp.int32(s))
+        losses.append(float(m["loss"]))
+    return {"losses": losses, "final_loss": float(np.mean(losses[-5:])),
+            "wall_s": time.time() - t0, "params": params, "model": model}
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

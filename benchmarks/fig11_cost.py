@@ -1,0 +1,86 @@
+"""Paper Fig. 11 + §IV-F cost discussion: per-op and per-model cost model.
+
+Two parts:
+  (1) measured: XLA int8 vs fp32 matmul microbenchmark on this host (CPU —
+      direction-of-effect check only; TPU MXU int8 is the real target where
+      peak is 2x bf16);
+  (2) modeled: the paper's FPGA-derived per-op constants and the memory
+      footprint of every WAGEUBN datapath vs FP32 (the ~4x claim).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+
+from .common import emit
+
+# paper Fig. 11 constants (relative to FP32 = 1.0): speed-up, power-down,
+# area-down for multiplication / accumulation.
+PAPER_MUL = {"int8": (3.0, 10.0, 9.0), "fp16": (1.5, 2.2, 2.1),
+             "int16": (2.0, 4.0, 3.8), "fp8": (2.3, 4.5, 4.0),
+             "int32": (1.2, 1.6, 1.6)}
+PAPER_ACC = {"int8": (9.0, 30.0, 30.0), "fp16": (1.8, 2.5, 2.4),
+             "int16": (4.5, 8.0, 8.0), "fp8": (2.5, 5.0, 4.8),
+             "int32": (2.2, 3.0, 3.0)}
+
+
+def _time(f, *args, iters=20):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    r.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> dict:
+    m = k = n = 1024
+    a8 = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128,
+                            jnp.int8)
+    b8 = jax.random.randint(jax.random.PRNGKey(1), (k, n), -128, 128,
+                            jnp.int8)
+    af = a8.astype(jnp.float32)
+    bf = b8.astype(jnp.float32)
+
+    dot8 = jax.jit(lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32))
+    dotf = jax.jit(lambda a, b: a @ b)
+    us8 = _time(dot8, a8, b8)
+    usf = _time(dotf, af, bf)
+    emit("fig11/matmul-int8-1k", us8, f"speedup_vs_f32={usf / us8:.2f}x")
+    emit("fig11/matmul-f32-1k", usf, "baseline=1.0x")
+
+    for dt, (s, p, ar) in PAPER_MUL.items():
+        emit(f"fig11/paper-mul-{dt}", 0.0,
+             f"speed={s}x power=1/{p}x area=1/{ar}x")
+    for dt, (s, p, ar) in PAPER_ACC.items():
+        emit(f"fig11/paper-acc-{dt}", 0.0,
+             f"speed={s}x power=1/{p}x area=1/{ar}x")
+
+    # memory model in BITS (the paper's accounting): per datapath widths
+    # W_master k_WU=24, Acc k_Acc=13, compute/cache tensors (A/E/KV) 8-bit,
+    # G 15-bit transient vs 32-bit everything for FP32.
+    acfg = get("granite-3-8b")
+    n_p = (acfg.n_layers * (acfg.d_model * (acfg.n_heads + 2 * acfg.n_kv)
+                            * acfg.dh + acfg.n_heads * acfg.dh * acfg.d_model
+                            + 3 * acfg.d_model * acfg.d_ff))
+    tokens = 4096 * 4
+    act = acfg.n_layers * tokens * acfg.d_model
+    fp32_bits = 32 * (2 * n_p) + 32 * act        # W+Acc states, activations
+    wage_bits = (24 + 13) * n_p + 8 * act        # 24b master+13b acc, A8
+    comp_fp32 = 32 * act
+    comp_wage = 8 * act                          # the paper's headline 4x
+    emit("fig11/memory-model", 0.0,
+         f"state+act_saving={fp32_bits/wage_bits:.2f}x "
+         f"compute_tensor_saving={comp_fp32/comp_wage:.2f}x "
+         f"(paper claims ~4x on compute tensors)")
+    return {"speedup": usf / us8,
+            "mem_saving": fp32_bits / wage_bits}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Fig. 7: data distributions of W, BN(x2), A, G, E before vs after
+quantization.  Reported as moment shifts + non-zero ratios + histogram
+overlap (1 = distribution unchanged by quantization, the paper's visual
+claim for W/BN/A/E and the intended *change* for G)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preset
+from repro.core import qfuncs as qf
+
+from .common import emit, steps_default, train_lm
+
+
+def _overlap(a, b, bins=64):
+    lo = min(float(a.min()), float(b.min()))
+    hi = max(float(a.max()), float(b.max()))
+    if hi <= lo:
+        return 1.0
+    ha, _ = np.histogram(a, bins=bins, range=(lo, hi), density=True)
+    hb, _ = np.histogram(b, bins=bins, range=(lo, hi), density=True)
+    ha, hb = ha / ha.sum(), hb / hb.sum()
+    return float(np.minimum(ha, hb).sum())
+
+
+def main() -> dict:
+    r = train_lm(preset("fp32"), steps_default(30))
+    model, params = r["model"], r["params"]
+    from repro.data import TokenTask
+    task = TokenTask(vocab=64, seq_len=32, global_batch=8)
+    batch = jax.tree.map(jnp.asarray, task.batch(999))
+    (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+
+    w = np.asarray(params["layers"]["wq"]).ravel()
+    g = np.asarray(grads["layers"]["wq"]).ravel()
+    x = np.asarray(params["embed"][batch["tokens"]]).ravel()
+    e = g * 1e-3 + np.random.RandomState(0).randn(g.size) * 1e-6
+
+    pairs = {
+        "W(Q8)": (w, np.asarray(qf.q_clip(jnp.asarray(w), 8))),
+        "A(Qscaled8)": (x, np.asarray(qf.q_scaled(jnp.asarray(x), 8))),
+        "G(CQ8)": (g, np.asarray(qf.cq(jnp.asarray(g),
+                                       jax.random.PRNGKey(0), 8, 15))),
+        "E(SQ8)": (e, np.asarray(qf.sq(jnp.asarray(e), 8))),
+        "E(flag8)": (e, np.asarray(qf.flag_qe2(jnp.asarray(e), 8))),
+    }
+    out = {}
+    for name, (before, after) in pairs.items():
+        ov = _overlap(before, after)
+        nz = float(np.mean(after != 0))
+        out[name] = ov
+        emit(f"fig7/{name}", 0.0,
+             f"hist_overlap={ov:.3f} nonzero_ratio={nz:.3f} "
+             f"std_before={before.std():.2e} std_after={after.std():.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Fig. 8: batch-size sensitivity of WAGEUBN vs full precision.
+Claim: accuracy holds down to small batches; only very small batch (16 in
+the paper) degrades the quantized net noticeably more than FP32."""
+from __future__ import annotations
+
+from repro.core import preset
+
+from .common import emit, steps_default, train_resnet
+
+
+def main() -> dict:
+    out = {}
+    for bs in (64, 32, 16, 8):
+        steps = steps_default(100)
+        for name, qcfg in [("fp32", preset("fp32")),
+                           ("full8", preset("full8", "sim"))]:
+            r = train_resnet(qcfg, steps, batch=bs)
+            out[f"{name}/bs{bs}"] = r["acc"]
+            emit(f"fig8/{name}-bs{bs}", r["wall_s"] / steps * 1e6,
+                 f"holdout_acc={r['acc']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig. 9/10: the error between matmul and norm (e3) under 8-bit
+Q_E2 vs 8-bit Flag-Q_E2 vs full precision.
+
+Fig. 9: distribution fidelity (flag ~= fp; plain sq8 flushes the center).
+Fig. 10: data ratio (fraction of non-zero values surviving quantization)
+per layer — flag8 must cover far more than sq8 (the paper's explanation of
+full-8-bit convergence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preset
+from repro.core import qfuncs as qf
+
+from .common import emit, steps_default, train_lm
+
+
+def main() -> dict:
+    r = train_lm(preset("fp32"), steps_default(20))
+    model, params = r["model"], r["params"]
+    from repro.data import TokenTask
+    task = TokenTask(vocab=64, seq_len=32, global_batch=8)
+    batch = jax.tree.map(jnp.asarray, task.batch(1234))
+
+    # capture e3 per layer = cotangent entering each projection matmul
+    captured = {}
+
+    def capture_loss(p):
+        loss, _ = model.loss(p, batch)
+        return loss
+
+    grads = jax.grad(capture_loss)(params)
+    # proxy for per-layer e3: gradients at layer inputs across depth —
+    # use per-layer weight grads (e3 x0^T) as the observable error signal
+    out = {}
+    for li in range(model.a.n_layers):
+        e3 = np.asarray(grads["layers"]["wq"][li]).ravel()
+        e3 = e3[e3 != 0]
+        if e3.size == 0:
+            continue
+        sq8 = np.asarray(qf.sq(jnp.asarray(e3), 8))
+        fl8 = np.asarray(qf.flag_qe2(jnp.asarray(e3), 8))
+        ratio_sq = float(np.mean(sq8 != 0))
+        ratio_fl = float(np.mean(fl8 != 0))
+        rel_sq = float(np.abs(sq8 - e3).mean() / (np.abs(e3).mean() + 1e-12))
+        rel_fl = float(np.abs(fl8 - e3).mean() / (np.abs(e3).mean() + 1e-12))
+        out[f"layer{li}"] = (ratio_sq, ratio_fl)
+        emit(f"fig10/layer{li}", 0.0,
+             f"data_ratio_sq8={ratio_sq:.3f} data_ratio_flag8={ratio_fl:.3f}"
+             f" relerr_sq8={rel_sq:.3f} relerr_flag8={rel_fl:.3f}")
+    # synthetic wide-dynamic-range errors (the regime of paper Fig. 9)
+    rng = np.random.RandomState(0)
+    e = rng.randn(1 << 16) * np.exp(rng.randn(1 << 16) * 2.5)
+    sq8 = np.asarray(qf.sq(jnp.asarray(e, jnp.float32), 8))
+    fl8 = np.asarray(qf.flag_qe2(jnp.asarray(e, jnp.float32), 8))
+    emit("fig9/wide-range", 0.0,
+         f"data_ratio_sq8={np.mean(sq8 != 0):.3f} "
+         f"data_ratio_flag8={np.mean(fl8 != 0):.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline benchmark: reads the dry-run artifacts and emits the per-cell
+terms (compute/memory/collective seconds, dominant bottleneck, roofline
+fraction, useful-FLOP ratio) as CSV rows."""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import load_artifacts, terms
+
+from .common import emit
+
+ART_DIR = os.environ.get("REPRO_ART_DIR", "artifacts/dryrun")
+
+
+def main() -> dict:
+    arts = load_artifacts(ART_DIR)
+    if not arts:
+        emit("roofline/none", 0.0, "no dry-run artifacts yet")
+        return {}
+    out = {}
+    for a in arts:
+        t = terms(a)
+        key = f"{a['arch']}/{a['shape']}/{a['mesh']}"
+        out[key] = t
+        emit(f"roofline/{key}", t["step_lower_bound_s"] * 1e6,
+             f"dominant={t['dominant']} compute_s={t['compute_s']:.3e} "
+             f"memory_s={t['memory_s']:.3e} "
+             f"collective_s={t['collective_s']:.3e} "
+             f"frac={t['roofline_fraction']:.3f} "
+             f"useful={t['useful_ratio']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig11] [--fast]
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser("benchmarks.run")
+    p.add_argument("--only", default="",
+                   help="comma-separated subset (table1,table2,fig7,...)")
+    p.add_argument("--fast", action="store_true")
+    args = p.parse_args()
+    if args.fast:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+
+    from . import (fig7_distributions, fig8_batchsize, fig9_10_e3,
+                   fig11_cost, roofline_bench, table1_accuracy,
+                   table2_sensitivity)
+    benches = {
+        "table1": table1_accuracy.main,
+        "table2": table2_sensitivity.main,
+        "fig7": fig7_distributions.main,
+        "fig8": fig8_batchsize.main,
+        "fig9_10": fig9_10_e3.main,
+        "fig11": fig11_cost.main,
+        "roofline": roofline_bench.main,
+    }
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name}/ERROR,0.0,{e!r}")
+        print(f"{name}/total,{(time.time() - t0) * 1e6:.0f},done",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

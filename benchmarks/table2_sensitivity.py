@@ -1,0 +1,42 @@
+"""Paper Table II: single-path quantization sensitivity on the WAGEUBN
+framework (quantize exactly ONE of W/A/BN/G/E1/E2 to 8-bit with the FP32
+update path, everything else fp32)."""
+from __future__ import annotations
+
+from repro.core import preset
+
+from .common import emit, steps_default, train_resnet
+
+OFF = dict(quant_w=False, quant_a=False, quant_bn=False, quant_g=False,
+           quant_e1=False, quant_e2=False, quant_u=False)
+
+RUNS = {
+    "kW=8": dict(quant_w=True),
+    "kBN=8": dict(quant_bn=True),
+    "kA=8": dict(quant_a=True),
+    "kGW=8": dict(quant_g=True),
+    "kE1=8": dict(quant_e1=True),
+    "kE2=8": dict(quant_e2=True),
+}
+
+
+def main() -> dict:
+    steps = steps_default(100)
+    base = train_resnet(preset("fp32"), steps)
+    emit("table2/fp32", base["wall_s"] / steps * 1e6,
+         f"holdout_acc={base['acc']:.4f}")
+    out = {"fp32": base["acc"]}
+    for name, on in RUNS.items():
+        # Table II's kBN=8 run narrows the norm widths to 8
+        qcfg = preset("full8", "sim").replace(**{**OFF, **on})
+        if name == "kBN=8":
+            qcfg = qcfg.replace(k_bn=8, k_mu=8, k_sigma=8)
+        r = train_resnet(qcfg, steps)
+        out[name] = r["acc"]
+        emit(f"table2/{name}", r["wall_s"] / steps * 1e6,
+             f"holdout_acc={r['acc']:.4f} delta={r['acc']-base['acc']:+.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

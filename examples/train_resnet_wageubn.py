@@ -1,0 +1,31 @@
+"""The paper's own experiment at CPU scale: ResNet under WAGEUBN.
+
+    PYTHONPATH=src python examples/train_resnet_wageubn.py [--steps 120]
+
+Trains the reduced ResNet on the learnable synthetic image task under the
+paper's three numeric configs and prints the Table-I-style comparison.
+"""
+import argparse
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import train_resnet  # noqa: E402
+from repro.core import preset  # noqa: E402
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=120)
+    args = p.parse_args()
+    print(f"{'config':15s} {'holdout acc':12s} {'us/step':10s}")
+    for name in ("fp32", "e2_16", "full8"):
+        qcfg = preset(name, "sim" if name != "fp32" else None)
+        r = train_resnet(qcfg, args.steps)
+        print(f"{name:15s} {r['acc']:<12.4f} "
+              f"{r['wall_s'] / args.steps * 1e6:<10.0f}")
+
+
+if __name__ == "__main__":
+    main()

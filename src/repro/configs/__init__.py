@@ -1,0 +1,38 @@
+"""Assigned architecture configs (exact, from the assignment block) + the
+paper's own ResNets.  `get(name)` returns the full ArchConfig; `--arch <id>`
+in the launchers resolves through ARCHS.
+"""
+from .base import ArchConfig, LM_SHAPES
+from .chameleon_34b import CFG as chameleon_34b
+from .granite_moe_1b_a400m import CFG as granite_moe_1b_a400m
+from .moonshot_v1_16b_a3b import CFG as moonshot_v1_16b_a3b
+from .granite_3_8b import CFG as granite_3_8b
+from .phi4_mini_3_8b import CFG as phi4_mini_3_8b
+from .minitron_4b import CFG as minitron_4b
+from .granite_34b import CFG as granite_34b
+from .falcon_mamba_7b import CFG as falcon_mamba_7b
+from .zamba2_7b import CFG as zamba2_7b
+from .seamless_m4t_large_v2 import CFG as seamless_m4t_large_v2
+from .resnets import RESNET18, RESNET34, RESNET50
+
+ARCHS = {
+    c.name: c for c in [
+        chameleon_34b, granite_moe_1b_a400m, moonshot_v1_16b_a3b,
+        granite_3_8b, phi4_mini_3_8b, minitron_4b, granite_34b,
+        falcon_mamba_7b, zamba2_7b, seamless_m4t_large_v2,
+        RESNET18, RESNET34, RESNET50,
+    ]
+}
+
+ASSIGNED = [
+    "chameleon-34b", "granite-moe-1b-a400m", "moonshot-v1-16b-a3b",
+    "granite-3-8b", "phi4-mini-3.8b", "minitron-4b", "granite-34b",
+    "falcon-mamba-7b", "zamba2-7b", "seamless-m4t-large-v2",
+]
+
+
+def get(name: str) -> ArchConfig:
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "LM_SHAPES", "ARCHS", "ASSIGNED", "get"]

@@ -1,0 +1,118 @@
+"""Architecture configuration schema + the shape sets assigned to this paper."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+# Assigned LM shape set: name -> (seq_len, global_batch, kind)
+# kind: "train" lowers train_step; "decode" lowers serve_step (one token,
+# KV cache of seq_len); "prefill" lowers train-like forward (no loss bwd? —
+# prefill is inference forward: lowered as serve prefill over seq_len).
+LM_SHAPES = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # lm | moe | ssm | hybrid | encdec | resnet
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "silu"
+    rope_theta: float = 1e4
+
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba1/mamba2)
+    ssm_state: int = 0
+    ssm_kind: str = ""           # mamba1 | mamba2
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64            # mamba2 head dim
+
+    # hybrid (zamba2): shared attention block every `attn_every` layers
+    attn_every: int = 0
+
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    tgt_ratio: int = 4           # tgt_len = seq_len // tgt_ratio
+
+    # resnet
+    block: str = ""              # basic | bottleneck
+    stage_sizes: tuple = ()
+    num_classes: int = 1000
+    img_size: int = 224
+
+    # which assigned shapes run (others are recorded skips, see DESIGN.md §6)
+    shapes: tuple = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: dict = field(default_factory=dict, hash=False, compare=False)
+
+    # attention chunking (memory control for 32k prefill)
+    q_chunk: int = 1024
+    kv_chunk: int = 512
+    # SSM sequence-chunk size (mamba1 associative-scan / mamba2 SSD chunks)
+    scan_chunk: int = 256
+    # unroll scan-over-layers (cost-analysis compiles only: XLA counts while
+    # bodies once, so exact FLOP/byte accounting needs unrolled layers)
+    unroll_layers: bool = False
+    # remat policy for scan-over-layers: "full" (checkpoint every layer)
+    # or "none" (save everything; trades HBM for recompute, §Perf)
+    remat: str = "full"
+    # unroll the SSM chunk scans (cost-analysis compiles: exact counting
+    # without the giant single-chunk masks that stall constant folding)
+    unroll_scan_chunks: bool = False
+
+    source: str = ""
+
+    @property
+    def dh(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def vocab_padded(self) -> int:
+        """vocab padded to a multiple of 512 for TP divisibility."""
+        return ((self.vocab + 511) // 512) * 512
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw = dict(
+            n_layers=min(self.n_layers, 2), d_model=64,
+            n_heads=4, n_kv=min(self.n_kv, 2) if self.n_kv else 0,
+            d_ff=96 if self.d_ff else 0, vocab=min(self.vocab, 128),
+            head_dim=16, q_chunk=16, kv_chunk=16,
+        )
+        if self.moe_experts:
+            kw.update(moe_experts=4, moe_topk=2)
+        if self.ssm_state:
+            kw.update(ssm_state=4, headdim=8)
+        if self.attn_every:
+            kw.update(attn_every=1, n_layers=2)
+        if self.enc_layers:
+            kw.update(enc_layers=2, dec_layers=2)
+        if self.family == "resnet":
+            kw = dict(stage_sizes=(1, 1), num_classes=10, img_size=16)
+        return self.replace(name=self.name + "-smoke", **kw)

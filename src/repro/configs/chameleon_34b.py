@@ -1,0 +1,17 @@
+"""chameleon-34b [vlm]: 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536 — early-fusion, VQ image tokens [arXiv:2405.09818; unverified].
+
+Frontend stub: VQ image tokens are vocabulary entries, so input_specs()
+provides token ids directly (DESIGN.md §6).  long_500k skipped: pure full
+attention (quadratic) — recorded skip.
+"""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv=8, d_ff=22016,
+    vocab=65536, head_dim=128, norm="rmsnorm", act="silu",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="arXiv:2405.09818; unverified",
+)

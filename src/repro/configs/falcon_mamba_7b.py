@@ -1,0 +1,15 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 (attn-free) d_ff=0 vocab=65024,
+ssm_state=16 — mamba1 arch [arXiv:2410.05355; unverified].
+
+Sub-quadratic: runs all four shapes including long_500k (O(1) decode state).
+"""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, d_ff=0, vocab=65024,
+    ssm_state=16, ssm_kind="mamba1", d_conv=4, expand=2,
+    norm="rmsnorm",
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2410.05355; unverified",
+)

@@ -1,0 +1,12 @@
+"""granite-34b [dense]: 88L d_model=6144 48H (GQA kv=1 = MQA) d_ff=24576
+vocab=49152 — llama-arch, code [arXiv:2405.04324; hf]."""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="granite-34b", family="lm",
+    n_layers=88, d_model=6144, n_heads=48, n_kv=1, d_ff=24576,
+    vocab=49152, head_dim=128, norm="rmsnorm", act="silu",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="arXiv:2405.04324; hf",
+)

@@ -1,0 +1,12 @@
+"""granite-3-8b [dense]: 40L d_model=4096 32H (GQA kv=8) d_ff=12800
+vocab=49155 — GQA [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="granite-3-8b", family="lm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv=8, d_ff=12800,
+    vocab=49155, head_dim=128, norm="rmsnorm", act="silu",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="hf:ibm-granite/granite-3.0-2b-base; hf",
+)

@@ -1,0 +1,12 @@
+"""minitron-4b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=9216
+vocab=256000 — pruned nemotron [arXiv:2407.14679; hf]."""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="minitron-4b", family="lm",
+    n_layers=32, d_model=3072, n_heads=24, n_kv=8, d_ff=9216,
+    vocab=256000, head_dim=128, norm="rmsnorm", act="silu",
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="arXiv:2407.14679; hf",
+)

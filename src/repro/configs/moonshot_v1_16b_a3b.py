@@ -1,0 +1,14 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 — kimi/moonlight
+[hf:moonshotai/Moonlight-16B-A3B; hf]."""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv=16, d_ff=1408,
+    vocab=163840, head_dim=128, norm="rmsnorm", act="silu",
+    moe_experts=64, moe_topk=6,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="hf:moonshotai/Moonlight-16B-A3B; hf",
+)

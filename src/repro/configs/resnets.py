@@ -1,0 +1,12 @@
+"""The paper's own models: ResNet18/34/50 (ImageNet scale)."""
+from .base import ArchConfig
+
+RESNET18 = ArchConfig(name="resnet18", family="resnet", block="basic",
+                      stage_sizes=(2, 2, 2, 2), num_classes=1000,
+                      img_size=224, shapes=())
+RESNET34 = ArchConfig(name="resnet34", family="resnet", block="basic",
+                      stage_sizes=(3, 4, 6, 3), num_classes=1000,
+                      img_size=224, shapes=())
+RESNET50 = ArchConfig(name="resnet50", family="resnet", block="bottleneck",
+                      stage_sizes=(3, 4, 6, 3), num_classes=1000,
+                      img_size=224, shapes=())

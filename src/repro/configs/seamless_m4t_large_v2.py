@@ -1,0 +1,19 @@
+"""seamless-m4t-large-v2 [audio]: 24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+Backbone only: the audio frontend is a stub (input_specs provides
+precomputed frame embeddings).  Enc-dec (NOT encoder-only) => decode shapes
+run; long_500k skipped (full attention).  24L = 24 encoder + 24 decoder
+layers (the v2 backbone splits; recorded in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    n_layers=0, d_model=1024, n_heads=16, n_kv=16, d_ff=8192,
+    vocab=256206, head_dim=64, norm="layernorm", act="gelu",
+    enc_layers=24, dec_layers=24, tgt_ratio=4,
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes={"long_500k": "pure full attention (quadratic): skipped"},
+    source="arXiv:2308.11596; hf",
+)

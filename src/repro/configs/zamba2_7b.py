@@ -1,0 +1,18 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 + shared attn blocks
+[arXiv:2411.15242; unverified].
+
+Hybrid: decode attention over the shared-block KV cache is O(S) per token
+(sub-quadratic) -> long_500k runs.
+"""
+from .base import ArchConfig
+
+CFG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv=32, d_ff=14336,
+    vocab=32000, head_dim=112, norm="rmsnorm", act="silu",
+    ssm_state=64, ssm_kind="mamba2", d_conv=4, expand=2, headdim=64,
+    attn_every=6,
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    source="arXiv:2411.15242; unverified",
+)

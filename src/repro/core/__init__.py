@@ -1,0 +1,11 @@
+"""WAGEUBN core: quantization functions, quantized ops, quantized norms."""
+from .qconfig import FULL8, E2_16, FP32, PRESETS, QConfig, preset
+from . import qfuncs
+from .qdense import qact, qconv, qdense, qeinsum, qprobs, qweight, qbn_param
+from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
+
+__all__ = [
+    "FULL8", "E2_16", "FP32", "PRESETS", "QConfig", "preset", "qfuncs",
+    "qact", "qconv", "qdense", "qeinsum", "qprobs", "qweight", "qbn_param",
+    "qbatchnorm", "qlayernorm", "qrmsnorm",
+]

@@ -1,0 +1,112 @@
+"""Quantization configuration for the WAGEUBN framework.
+
+Bit-width notation follows the paper (Yang et al. 2019, §III-B/§IV-A):
+  k_W, k_A, k_GW, k_E1, k_E2  — weights / activations / weight-grad (dr bits) /
+                                error at layer boundary / error before matmul
+  k_GC                        — constant scale bits of CQ (Eq. 7)
+  k_BN, k_mu, k_sigma, k_gamma, k_beta — BN / norm operand widths (Eq. 13)
+  k_Ggamma, k_Gbeta           — gamma/beta gradient widths (Eq. 18)
+  k_Mom, k_Acc, k_lr, k_WU    — Momentum optimizer + update widths (Eq. 19-24)
+
+Paper presets (§IV-A): full 8-bit ("FULL8") and the 16-bit E2 variant
+("E2_16").  "FP32" turns every quantizer into the identity — the vanilla
+baseline the paper compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class QConfig:
+    # Numeric mode: "fp32" (vanilla), "sim" (grid values carried in fp32),
+    # "native" (int8/int16 payloads + pow2 scales, integer dot_generals).
+    mode: str = "sim"
+
+    # --- forward-path widths ---
+    k_w: int = 8
+    k_a: int = 8
+    k_bn: int = 16
+    k_mu: int = 16
+    k_sigma: int = 16
+    k_gamma: int = 8
+    k_beta: int = 8
+
+    # --- error-path widths (backward) ---
+    k_e1: int = 8            # Q_E1 = shift-quantization at layer boundaries
+    k_e2: int = 8            # Q_E2 before weight matmuls (flag or 16-bit)
+    e2_kind: str = "flag8"   # "flag8" (Eq. 17) | "sq16" (Eq. 16) | "sq8"
+    e_attn_kind: str = "sq8" # error quant for activation-activation matmuls
+
+    # --- gradient / optimizer widths ---
+    k_gw: int = 8            # dr bits of CQ (shrinks during training)
+    k_gc: int = 15           # constant scale bits of CQ
+    k_ggamma: int = 15
+    k_gbeta: int = 15
+    k_mom: int = 3
+    k_acc: int = 13
+    k_lr: int = 10
+    k_wu: int = 24
+    stochastic_g: bool = True  # stochastic rounding inside CQ (paper Eq. 7)
+
+    # Norm backward: full autodiff-through-stats (True) or the paper's
+    # elementwise 1/sigma approximation (False).
+    norm_full_bwd: bool = True
+
+    # ---- beyond-paper performance knobs (EXPERIMENTS.md §Perf) ----
+    # fixed 2^(1-k_W) scale for weight operands in qeinsum (skips the amax
+    # pass; valid because Q_W saturates to (-1,1)) -> int8 FSDP gathers
+    fixed_w_scale: bool = False
+    # carrier dtype at TP matmul boundaries ("f32" | "bf16"): bf16 holds the
+    # 8-bit activation grid exactly and halves all-reduce bytes
+    tp_comm_dtype: str = "f32"
+    # carrier dtype for the SSM scan intermediates ("f32" | "bf16")
+    scan_dtype: str = "f32"
+
+    # Per-path switches (paper Table II single-path sensitivity runs).
+    quant_w: bool = True
+    quant_a: bool = True
+    quant_bn: bool = True
+    quant_g: bool = True
+    quant_e1: bool = True
+    quant_e2: bool = True
+    quant_u: bool = True
+
+    @property
+    def quantize(self) -> bool:
+        return self.mode != "fp32"
+
+    @property
+    def native(self) -> bool:
+        return self.mode == "native"
+
+    def replace(self, **kw) -> "QConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> None:
+        # Paper Eq. 22: k_Ggamma = k_Gbeta = k_GC = k_Mom + k_Acc - 1
+        assert self.k_ggamma == self.k_gbeta == self.k_gc == (
+            self.k_mom + self.k_acc - 1
+        ), "bit-width closure Eq.(22) violated"
+        # Paper Eq. 24: k_WU = k_GC + k_lr - 1
+        assert self.k_wu == self.k_gc + self.k_lr - 1, (
+            "bit-width closure Eq.(24) violated"
+        )
+        assert self.e2_kind in ("flag8", "sq16", "sq8")
+        assert self.mode in ("fp32", "sim", "native")
+
+
+FULL8 = QConfig()                                   # paper full 8-bit version
+E2_16 = QConfig(e2_kind="sq16", k_e2=16)            # paper 16-bit E2 version
+FP32 = QConfig(mode="fp32")                         # vanilla baseline
+
+PRESETS = {"full8": FULL8, "e2_16": E2_16, "fp32": FP32}
+
+
+def preset(name: str, mode: str | None = None) -> QConfig:
+    cfg = PRESETS[name]
+    if mode is not None:
+        cfg = cfg.replace(mode=mode)
+    cfg.validate()
+    return cfg

@@ -1,0 +1,233 @@
+"""Quantized compute ops with WAGEUBN backward semantics.
+
+The paper's dataflow (Fig. 5 / Algorithms 1-2) is realized with three
+custom-vjp ops:
+
+  qeinsum  — every matmul.  Forward: int8 x int8 -> int32 (native) or exact
+             grid fp32 (sim).  Backward: the incoming cotangent is quantized
+             with Q_E2 (paper e3), then BOTH the input-error dot (e4 = W^T e3)
+             and the weight-gradient dot (g_W = e3 x0^T) run on integer
+             operands — exactly Algorithm 2.
+  qact     — activation + Q_A.  Backward applies Q_E1 (shift quantization)
+             to the cotangent at the layer boundary (paper e0), then the
+             activation derivative (paper e1) — exactly Algorithm 2.
+  qconv    — ResNet convolutions, same error semantics via jax.vjp on the
+             saturating conv evaluated at quantized operands.
+
+Weight quantization Q_W (Eq. 10) is applied by callers through `qweight`
+(STE, so the gradient reaches the int32 master copy unchanged, Eq. 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import qfuncs as qf
+from .qconfig import QConfig
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# weight / activation / prob quantizers (forward-path, STE)
+# --------------------------------------------------------------------------
+
+
+def qweight(cfg: QConfig, w: Array) -> Array:
+    """Q_W (Eq. 10): k_W-bit direct quantization with saturation, STE."""
+    if not cfg.quantize or not cfg.quant_w:
+        return w
+    return qf.ste(lambda t: qf.q_clip(t, cfg.k_w), w)
+
+
+def qbn_param(cfg: QConfig, p: Array, k: int) -> Array:
+    """Q for norm operands (gamma/beta/mu/sigma, Eq. 13), STE."""
+    if not cfg.quantize:
+        return p
+    return qf.ste(lambda t: qf.q_direct(t, k), p)
+
+
+def qprobs(cfg: QConfig, p: Array) -> Array:
+    """Attention probabilities onto the k_A grid (in [0,1] so Q is exact-range)."""
+    if not cfg.quantize:
+        return p
+    return qf.ste(lambda t: qf.q_direct(t, cfg.k_a), p)
+
+
+_ACT = {
+    "relu": (jax.nn.relu, lambda x: (x > 0).astype(jnp.float32)),
+    "silu": (jax.nn.silu,
+             lambda x: jax.nn.sigmoid(x)
+             * (1.0 + x * (1.0 - jax.nn.sigmoid(x)))),
+    "gelu": (jax.nn.gelu,
+             lambda x: jax.grad(lambda t: jax.nn.gelu(t).sum())(x)),
+    "none": (lambda x: x, lambda x: jnp.ones_like(x)),
+}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def qact(cfg: QConfig, act: str, x: Array) -> Array:
+    fn, _ = _ACT[act]
+    y = fn(x)
+    if cfg.quantize and cfg.quant_a:
+        y = qf.q_scaled(y, cfg.k_a)
+    return y
+
+
+def _qact_fwd(cfg, act, x):
+    return qact(cfg, act, x), x
+
+
+def _qact_bwd(cfg, act, x, g):
+    _, dfn = _ACT[act]
+    if cfg.quantize and cfg.quant_e1:
+        g = qf.sq(g, cfg.k_e1)          # Q_E1: e0 = SQ(e4^{l+1})   (Eq. 15)
+    return (g * dfn(x),)                # e1 = e0 * dACT            (Alg. 2)
+
+
+qact.defvjp(_qact_fwd, _qact_bwd)
+
+
+# --------------------------------------------------------------------------
+# quantized einsum
+# --------------------------------------------------------------------------
+
+
+def _bwd_specs(spec: str):
+    ins, out = spec.split("->")
+    a_s, b_s = ins.split(",")
+    for idx in a_s:
+        assert idx in out or idx in b_s, f"unsupported einsum {spec}"
+    for idx in b_s:
+        assert idx in out or idx in a_s, f"unsupported einsum {spec}"
+    return f"{out},{b_s}->{a_s}", f"{a_s},{out}->{b_s}"
+
+
+def _int_einsum(spec, a, b):
+    return jnp.einsum(spec, a, b, preferred_element_type=jnp.int32)
+
+
+def _dec_b(cfg, b, b_weight):
+    if b_weight and cfg.fixed_w_scale:
+        return qf.dec_int8_fixed(b, cfg.k_w)
+    return qf.dec_int8(b, cfg.k_w)
+
+
+def _carrier(cfg, y):
+    if cfg.tp_comm_dtype == "bf16":
+        return y.astype(jnp.bfloat16).astype(jnp.float32)
+    return y
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def qeinsum(cfg: QConfig, spec: str, e_kind: str, b_weight: bool,
+            a: Array, b: Array) -> Array:
+    """y = einsum(spec, a, b) with WAGEUBN forward/backward quantization.
+
+    `a` and `b` must already be on their forward grids (via qact/qweight);
+    `e_kind` selects Q_E2 ("flag8" | "sq16" | "sq8" | "none"); `b_weight`
+    marks b as a saturated Q_W weight (enables fixed-scale int8, §Perf).
+    """
+    if not cfg.quantize:
+        return jnp.einsum(spec, a, b)
+    if cfg.native:
+        a8, sa = qf.dec_int8(a, cfg.k_a)
+        b8, sb = _dec_b(cfg, b, b_weight)
+        y = _int_einsum(spec, a8, b8).astype(jnp.float32) * (sa * sb)
+        return _carrier(cfg, y)
+    return _carrier(cfg, jnp.einsum(spec, a, b))
+
+
+def _qeinsum_fwd(cfg, spec, e_kind, b_weight, a, b):
+    if not cfg.quantize:
+        return jnp.einsum(spec, a, b), (a, b)
+    if cfg.native:
+        a8, sa = qf.dec_int8(a, cfg.k_a)
+        b8, sb = _dec_b(cfg, b, b_weight)
+        y = _int_einsum(spec, a8, b8).astype(jnp.float32) * (sa * sb)
+        # int8 residuals: the paper's 4x activation-memory saving
+        return _carrier(cfg, y), (a8, sa, b8, sb)
+    return _carrier(cfg, jnp.einsum(spec, a, b)), (a, b)
+
+
+def _qeinsum_bwd(cfg, spec, e_kind, b_weight, res, g):
+    da_spec, db_spec = _bwd_specs(spec)
+    if not cfg.quantize:
+        a, b = res
+        return jnp.einsum(da_spec, g, b), jnp.einsum(db_spec, a, g)
+
+    kind = e_kind if e_kind != "default" else cfg.e2_kind
+    if not cfg.quant_e2:
+        kind = "none"
+    if cfg.native:
+        a8, sa, b8, sb = res
+        planes = (qf.dec_error(g, kind, cfg.k_e2) if kind != "none"
+                  else [qf.dec_int16(g, 16)])
+        da = jnp.zeros((), jnp.float32)
+        db = jnp.zeros((), jnp.float32)
+        for e_data, se in planes:
+            # e4 = W^T e3 and g_W = e3 x0^T on integer operands (Alg. 2)
+            da = da + _int_einsum(da_spec, e_data, b8).astype(jnp.float32) \
+                * (se * sb)
+            db = db + _int_einsum(db_spec, a8, e_data).astype(jnp.float32) \
+                * (sa * se)
+        return da, db
+
+    a, b = res
+    eq = qf.quant_error(g, kind, cfg.k_e2) if kind != "none" else g
+    return jnp.einsum(da_spec, eq, b), jnp.einsum(db_spec, a, eq)
+
+
+qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
+
+
+def qdense(cfg: QConfig, x: Array, w: Array,
+           e_kind: str = "default") -> Array:
+    """x @ Q_W(w): the Conv step of Alg. 1 for matmul architectures.
+
+    x: (..., K) on the activation grid;  w: (K, N) master weights.
+    """
+    wq = qweight(cfg, w)
+    xm = x.reshape((-1, x.shape[-1]))
+    y = qeinsum(cfg, "mk,kn->mn", e_kind, True, xm, wq)
+    return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+# --------------------------------------------------------------------------
+# quantized convolution (ResNet reproduction)
+# --------------------------------------------------------------------------
+
+
+def _conv(x, w, stride, padding):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
+def qconv(cfg: QConfig, x: Array, wq: Array, stride: int,
+          padding: str) -> Array:
+    """Quantized conv: operands on grid; backward errors through Q_E2.
+
+    Conv arithmetic runs on exact grid values in fp32 (integer-identical;
+    see DESIGN.md §3 — XLA's int8 conv path is TPU-only, so the carrier is
+    fp32 while the *semantics* are fixed-point).
+    """
+    return _conv(x, wq, stride, padding)
+
+
+def _qconv_fwd(cfg, x, wq, stride, padding):
+    y, vjp = jax.vjp(lambda t, v: _conv(t, v, stride, padding), x, wq)
+    return y, vjp
+
+
+def _qconv_bwd(cfg, stride, padding, vjp, g):
+    if cfg.quantize and cfg.quant_e2:
+        g = qf.quant_error(g, cfg.e2_kind, cfg.k_e2)   # e3 = Q_E2(...)
+    return vjp(g)
+
+
+qconv.defvjp(_qconv_fwd, _qconv_bwd)

@@ -1,0 +1,223 @@
+"""WAGEUBN quantization functions (paper §III-C) + fixed-point helpers.
+
+All "grid" tensors are fp32 arrays whose values lie *exactly* on a fixed-point
+grid: x = n * step with step a power of two and |n| < 2^(k-1).  Every paper
+width k <= 24 fits exactly in fp32's 24-bit mantissa, so fp32 VPU arithmetic
+on grid values is bit-identical to integer arithmetic (see DESIGN.md §3).
+
+Three quantizers (paper Eq. 6/7/8/17):
+  q_direct  — round onto the 2^-(k-1) grid                       (W, A, BN)
+  cq        — stochastic-rounded, range-normalized, constant-scaled (G)
+  sq        — shift quantization with layer-wise pow2 scale R(x)    (E)
+  flag_qe2  — 8-bit + flag-bit format, two pow2 regimes             (e3)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# --------------------------------------------------------------------------
+# basic fixed-point helpers
+# --------------------------------------------------------------------------
+
+
+def d(k: int) -> float:
+    """Minimum interval of a k-bit fixed-point grid (paper Eq. 8)."""
+    return 2.0 ** (1 - k)
+
+
+def amax(x: Array) -> Array:
+    return jnp.max(jnp.abs(x))
+
+
+def pow2_round(m: Array) -> Array:
+    """R(x) = 2^round(log2 m) for m = max|x| (paper Eq. 7); R(0) := 1."""
+    safe = jnp.where(m > 0, m, 1.0)
+    return jnp.where(m > 0, jnp.exp2(jnp.round(jnp.log2(safe))), 1.0)
+
+
+def pow2_ceil(m: Array) -> Array:
+    """Smallest power of two >= m; 1 for m <= 0."""
+    safe = jnp.where(m > 0, m, 1.0)
+    return jnp.where(m > 0, jnp.exp2(jnp.ceil(jnp.log2(safe))), 1.0)
+
+
+def q_direct(x: Array, k: int) -> Array:
+    """Direct quantization Q(x,k) = round(x*2^(k-1)) / 2^(k-1)  (Eq. 6)."""
+    s = 2.0 ** (k - 1)
+    return jnp.round(x * s) / s
+
+
+def q_clip(x: Array, k: int) -> Array:
+    """Direct quantization + saturation to (-1, 1): used for W (Eq. 10)."""
+    lim = 1.0 - d(k)
+    return jnp.clip(q_direct(x, k), -lim, lim)
+
+
+def sq(x: Array, k: int) -> Array:
+    """Shift quantization SQ(x,k) = R * clip(Q(x/R, k), +-(1-d))  (Eq. 8)."""
+    r = pow2_round(amax(x))
+    lim = 1.0 - d(k)
+    return r * jnp.clip(q_direct(x / r, k), -lim, lim)
+
+
+def q_scaled(x: Array, k: int) -> Array:
+    """Scaled direct quantization for activations in the int8-native carrier.
+
+    Identical to the paper's Q_A (Eq. 14) whenever max|x| < 1; for larger
+    dynamic range a power-of-two amax factor extends coverage (this is
+    exactly WAGE's layer-wise scaling, see DESIGN.md §3).  Guarantees the
+    result is s * n * 2^-(k-1) with |n| <= 2^(k-1)-1 (int8-packable @ k=8).
+    """
+    s = jnp.maximum(pow2_ceil(amax(x)), 1.0)
+    lim = 1.0 - d(k)
+    return s * jnp.clip(q_direct(x / s, k), -lim, lim)
+
+
+def stochastic_round(x: Array, key: Array) -> Array:
+    """Sr(x) (Eq. 7): round to floor/ceil with probability by proximity."""
+    f = jnp.floor(x)
+    p = x - f
+    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    return f + (u < p).astype(x.dtype)
+
+
+def cq(x: Array, key: Array | None, dr_bits: int, k_gc: int,
+       stochastic: bool = True) -> Array:
+    """Constant quantization CQ (Eq. 7) for weight gradients G.
+
+    dr = 2^(dr_bits-1) shrinks during training (learning-rate-like schedule);
+    the output lives on the 2^-(k_gc-1) grid with range +-(dr-1)*2^-(k_gc-1).
+    """
+    r = pow2_round(amax(x))
+    n = x / r
+    dr = float(2 ** (dr_bits - 1))
+    y = dr * n
+    if stochastic:
+        assert key is not None, "stochastic CQ needs a PRNG key"
+        y = stochastic_round(y, key)
+    else:
+        y = jnp.round(y)
+    y = jnp.clip(y, -dr + 1.0, dr - 1.0)
+    return y / 2.0 ** (k_gc - 1)
+
+
+def flag_qe2(x: Array, k: int = 8) -> Array:
+    """Flag-bit error quantization (Eq. 17 / Fig. 4).
+
+    Sc = R(x)/2^(k-1).  Two regimes sharing an int8 mantissa:
+      |x| >= Sc : multiples of Sc       (flag=1)   n in +-(2^(k-1)-1)
+      |x| <  Sc : multiples of Sc/2^(k-1) (flag=0)
+    Note: Eq. 17 writes clip bounds +-(2^k - 1) but Fig. 4's bit layout
+    (sign + 7 data bits) implies +-(2^(k-1)-1); we follow Fig. 4 so the
+    mantissa is a true int8 (the MXU datapath the paper argues for).
+    """
+    r = pow2_round(amax(x))
+    sc = r / 2.0 ** (k - 1)
+    n = x / sc
+    lim = 2.0 ** (k - 1) - 1.0
+    big = sc * jnp.clip(jnp.round(n), -lim, lim)
+    small = sc * q_direct(n, k)  # multiples of sc * 2^-(k-1)
+    return jnp.where(jnp.abs(n) >= 1.0, big, small)
+
+
+def quant_error(x: Array, kind: str, k_e: int) -> Array:
+    """Dispatch for error quantizers used on cotangents."""
+    if kind == "flag8":
+        return flag_qe2(x, 8)
+    if kind == "sq16":
+        return sq(x, 16)
+    if kind == "sq8":
+        return sq(x, 8)
+    if kind == "sq":
+        return sq(x, k_e)
+    if kind == "none":
+        return x
+    raise ValueError(f"unknown error quantizer {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# straight-through estimator (paper Eq. 1)
+# --------------------------------------------------------------------------
+
+
+def ste(fn, x: Array) -> Array:
+    """y = fn(x) in the forward pass; identity cotangent in the backward."""
+
+    @jax.custom_vjp
+    def f(t):
+        return fn(t)
+
+    f.defvjp(lambda t: (fn(t), None), lambda _, g: (g,))
+    return f(x)
+
+
+# --------------------------------------------------------------------------
+# int payload decomposition (native mode)
+# --------------------------------------------------------------------------
+
+
+def dec_int8(x: Array, k: int = 8):
+    """Decompose a grid tensor into (int8 data, fp32 scalar scale).
+
+    value = data * scale, scale a power of two.  Exact (lossless) whenever x
+    came from q_scaled/q_clip/sq at width <= k; otherwise it quantizes.
+    """
+    s = jnp.maximum(pow2_ceil(amax(x)), 2.0 ** -24)
+    step = s * 2.0 ** (1 - k)
+    lim = 2.0 ** (k - 1) - 1.0
+    data = jnp.clip(jnp.round(x / step), -lim, lim).astype(jnp.int8)
+    return data, step
+
+
+def dec_int8_fixed(x: Array, k: int = 8):
+    """int8 decomposition with the FIXED step 2^(1-k) — exact for tensors
+    already saturated to (-1, 1) by q_clip (i.e. Q_W weights).  No amax
+    pass, no scalar collective; the int8 copy is what FSDP gathers."""
+    step = 2.0 ** (1 - k)
+    lim = 2.0 ** (k - 1) - 1.0
+    data = jnp.clip(jnp.round(x * (1.0 / step)), -lim, lim).astype(jnp.int8)
+    return data, jnp.float32(step)
+
+
+def dec_int16(x: Array, k: int = 16):
+    """Same as dec_int8 for 16-bit payloads (e.g. sq16 errors)."""
+    s = jnp.maximum(pow2_ceil(amax(x)), 2.0 ** -24)
+    step = s * 2.0 ** (1 - k)
+    lim = 2.0 ** (k - 1) - 1.0
+    data = jnp.clip(jnp.round(x / step), -lim, lim).astype(jnp.int16)
+    return data, step
+
+
+def dec_error(x: Array, kind: str, k_e: int):
+    """Decompose an error tensor into integer planes for native matmuls.
+
+    Returns a list of (data, scale) planes:
+      sq8   -> [(int8, R*2^-7)]
+      sq16  -> [(int16, R*2^-15)]
+      flag8 -> [(int8 hi, Sc), (int8 lo, Sc*2^-7)]  (disjoint support; this is
+               the TPU realization of the paper's 9-bit flag format: storage
+               and both backward dots stay int8)
+    """
+    if kind in ("sq8", "sq"):
+        k = 8 if kind == "sq8" else k_e
+        xq = sq(x, k)
+        return [dec_int8(xq, k)]
+    if kind == "sq16":
+        xq = sq(x, 16)
+        return [dec_int16(xq, 16)]
+    if kind == "flag8":
+        k = 8
+        r = pow2_round(amax(x))
+        sc = r / 2.0 ** (k - 1)
+        n = x / sc
+        lim = 2.0 ** (k - 1) - 1.0
+        isbig = jnp.abs(n) >= 1.0
+        hi = jnp.where(isbig, jnp.clip(jnp.round(n), -lim, lim), 0.0)
+        lo = jnp.where(isbig, 0.0,
+                       jnp.clip(jnp.round(n * 2.0 ** (k - 1)), -lim, lim))
+        return [(hi.astype(jnp.int8), sc),
+                (lo.astype(jnp.int8), sc * 2.0 ** (1 - k))]
+    raise ValueError(f"unknown error quantizer {kind!r}")

@@ -1,0 +1,76 @@
+"""Quantized normalization layers (paper Eq. 11-13, adapted per DESIGN.md §3).
+
+The paper quantizes BN's operands: mu -> k_mu, sigma -> k_sigma, the
+normalized activation x_hat -> k_BN, gamma/beta -> k_gamma/k_beta.  All
+quantizers use STE, so standard autodiff through these functions *is* the
+paper's quantized backward evaluated on grid values (e1 = e0*gamma_q,
+g_gamma = e1*x_hat, g_beta = e1, and the stat terms of e3's pre-image).
+Q_E2 on the outgoing error is applied by the adjacent qeinsum/qconv.
+
+RMSNorm / LayerNorm ports keep the identical bit-width recipe — RMSNorm is
+BN with per-token statistics, no mean and no running stats (the paper itself
+drops running stats "considering the computational cost", §IV-D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import qfuncs as qf
+from .qconfig import QConfig
+
+Array = jax.Array
+
+EPS_Q = 2.0 ** -8  # epsilon_q: small fixed-point value (Eq. 12)
+
+
+def _qs(cfg: QConfig, t: Array, k: int) -> Array:
+    """Direct-quantize with STE when quantization is on."""
+    if not cfg.quantize or not cfg.quant_bn:
+        return t
+    return qf.ste(lambda v: qf.q_direct(v, k), t)
+
+
+def _maybe_stop(cfg: QConfig, t: Array) -> Array:
+    return t if cfg.norm_full_bwd else jax.lax.stop_gradient(t)
+
+
+def qbatchnorm(cfg: QConfig, x: Array, gamma: Array, beta: Array) -> Array:
+    """Quantized BN over all axes but the last (channel), paper Eq. 12."""
+    axes = tuple(range(x.ndim - 1))
+    mu = _maybe_stop(cfg, jnp.mean(x, axes))
+    var = _maybe_stop(cfg, jnp.mean(jnp.square(x), axes) - jnp.square(mu))
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    mu_q = _qs(cfg, mu, cfg.k_mu)
+    sigma_q = _qs(cfg, sigma, cfg.k_sigma)
+    xhat = (x - mu_q) / (sigma_q + EPS_Q)
+    xhat = _qs(cfg, xhat, cfg.k_bn)                        # Q_BN
+    gamma_q = _qs(cfg, gamma, cfg.k_gamma)
+    beta_q = _qs(cfg, beta, cfg.k_beta)
+    return gamma_q * xhat + beta_q
+
+
+def qrmsnorm(cfg: QConfig, x: Array, gamma: Array) -> Array:
+    """Quantized RMSNorm: the BN recipe with per-token stats, no mean."""
+    ms = _maybe_stop(cfg, jnp.mean(jnp.square(x), axis=-1, keepdims=True))
+    sigma = jnp.sqrt(ms)
+    sigma_q = _qs(cfg, sigma, cfg.k_sigma)
+    xhat = x / (sigma_q + EPS_Q)
+    xhat = _qs(cfg, xhat, cfg.k_bn)
+    gamma_q = _qs(cfg, gamma, cfg.k_gamma)
+    return gamma_q * xhat
+
+
+def qlayernorm(cfg: QConfig, x: Array, gamma: Array, beta: Array) -> Array:
+    """Quantized LayerNorm (per-token mean + var), same widths as BN."""
+    mu = _maybe_stop(cfg, jnp.mean(x, axis=-1, keepdims=True))
+    var = _maybe_stop(
+        cfg, jnp.mean(jnp.square(x), axis=-1, keepdims=True) - jnp.square(mu))
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    mu_q = _qs(cfg, mu, cfg.k_mu)
+    sigma_q = _qs(cfg, sigma, cfg.k_sigma)
+    xhat = (x - mu_q) / (sigma_q + EPS_Q)
+    xhat = _qs(cfg, xhat, cfg.k_bn)
+    gamma_q = _qs(cfg, gamma, cfg.k_gamma)
+    beta_q = _qs(cfg, beta, cfg.k_beta)
+    return gamma_q * xhat + beta_q

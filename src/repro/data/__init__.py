@@ -1,0 +1,4 @@
+from .synthetic import (TokenTask, ImageTask, make_global_batch,
+                        host_local_slice)
+
+__all__ = ["TokenTask", "ImageTask", "make_global_batch", "host_local_slice"]

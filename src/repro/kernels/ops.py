@@ -1,0 +1,52 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU backends, jnp oracle on CPU.
+
+This container lowers Pallas TPU kernels only under interpret=True, so the
+default execution path on CPU is the oracle (identical math); tests sweep
+the kernels in interpret mode against the oracles.  On a TPU backend the
+compiled kernels are selected automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .qmatmul import qmatmul
+from .quantize import cq_stochastic, quantize_fused
+from .selective_scan import selective_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def qmatmul_op(a8, b8, *, force_kernel=False):
+    if _on_tpu():
+        return qmatmul(a8, b8, interpret=False)
+    if force_kernel:
+        return qmatmul(a8, b8, interpret=True)
+    return ref.qmatmul_ref(a8, b8)
+
+
+def quantize_op(x, inv_step, lim=127.0, *, force_kernel=False):
+    if _on_tpu():
+        return quantize_fused(x, inv_step, lim=lim, interpret=False)
+    if force_kernel:
+        return quantize_fused(x, inv_step, lim=lim, interpret=True)
+    return ref.quantize_ref(x, inv_step, lim)
+
+
+def cq_op(x, bits, inv_step, dr=128.0, *, force_kernel=False):
+    if _on_tpu():
+        return cq_stochastic(x, bits, inv_step, dr=dr, interpret=False)
+    if force_kernel:
+        return cq_stochastic(x, bits, inv_step, dr=dr, interpret=True)
+    return ref.cq_stochastic_ref(x, bits, inv_step, dr)
+
+
+def selective_scan_op(a, b, c, *, force_kernel=False):
+    if _on_tpu():
+        return selective_scan(a, b, c, interpret=False)
+    if force_kernel:
+        return selective_scan(a, b, c, interpret=True)
+    return ref.selective_scan_ref(a, b, c)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: blocked int8 x int8 -> int32 matmul (the WAGEUBN MAC).
+
+MXU-native tiling: (bm, bk) x (bk, bn) int8 blocks feed the systolic array;
+the int32 accumulator lives in VMEM scratch and persists across the K grid
+dimension (sequential innermost).  Block shapes default to 128-aligned —
+the MXU operates on 128x128 tiles; int8 packs 2 values/lane so bk=256 keeps
+the lanes full on real hardware.
+
+Validated in interpret mode against ref.qmatmul_ref (this container is
+CPU-only; TPU is the compilation target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _qmm_kernel(a_ref, b_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def qmatmul(a8: jax.Array, b8: jax.Array, *, bm: int = 128, bn: int = 128,
+            bk: int = 256, interpret: bool = True) -> jax.Array:
+    """a8: (M, K) int8; b8: (K, N) int8 -> (M, N) int32."""
+    m, k = a8.shape
+    k2, n = b8.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        a8 = jnp.pad(a8, ((0, pm), (0, pk)))
+    if pk or pn:
+        b8 = jnp.pad(b8, ((0, pk), (0, pn)))
+    mm, nn, kk = m + pm, n + pn, k + pk
+
+    grid = (mm // bm, nn // bn, kk // bk)
+    kwargs = {}
+    if not interpret and pltpu is not None:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    scratch = (pltpu.VMEM((bm, bn), jnp.int32) if pltpu is not None
+               else pl.MemorySpace.ANY)  # pragma: no cover
+    out = pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+                  pl.BlockSpec((bk, bn), lambda i, j, l: (l, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.int32),
+        scratch_shapes=[scratch],
+        interpret=interpret,
+        **kwargs,
+    )(a8, b8)
+    return out[:m, :n]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(a8: jax.Array, b8: jax.Array) -> jax.Array:
+    """int8 (M,K) x int8 (K,N) -> int32 (M,N)."""
+    return jnp.dot(a8, b8, preferred_element_type=jnp.int32)
+
+
+def quantize_ref(x: jax.Array, inv_step: jax.Array, lim: float) -> jax.Array:
+    """Fused shift/direct quantize payload: clip(round(x*inv_step), +-lim)."""
+    return jnp.clip(jnp.round(x * inv_step), -lim, lim).astype(jnp.int8)
+
+
+def cq_stochastic_ref(x: jax.Array, bits: jax.Array, inv_step: jax.Array,
+                      dr: float) -> jax.Array:
+    """Stochastic-rounding constant-quantize payload (paper Eq. 7).
+
+    bits: uint32 random bits; u = low 24 bits / 2^24 in [0,1).
+    Returns int16 payload on the dr grid: clip(Sr(x*inv_step), +-(dr-1)).
+    """
+    v = x * inv_step
+    f = jnp.floor(v)
+    u = (bits & jnp.uint32(0xFFFFFF)).astype(jnp.float32) * (2.0 ** -24)
+    y = f + (u < (v - f)).astype(jnp.float32)
+    return jnp.clip(y, -dr + 1.0, dr - 1.0).astype(jnp.int16)
+
+
+def selective_scan_ref(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t (h_0 = 0);  y_t = sum_n c_t[n] * h_t[:, n].
+
+    a, b: (B, S, D, N); c: (B, S, N) -> y: (B, S, D).
+    """
+    def scan_one(a1, b1, c1):
+        def step(h, inp):
+            ai, bi, ci = inp
+            h = ai * h + bi
+            return h, jnp.sum(h * ci[None, :], axis=-1)
+        h0 = jnp.zeros(a1.shape[1:], jnp.float32)
+        _, y = jax.lax.scan(step, h0, (a1, b1, c1))
+        return y
+    return jax.vmap(scan_one)(a, b, c)

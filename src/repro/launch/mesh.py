@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(n_data: int = 1, n_model: int = 1, pod: int = 0):
+    """Small mesh over available devices (tests / smoke runs)."""
+    if pod:
+        return jax.make_mesh((pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_axes(mesh):
+    """(dp_axes, tp_axis) convention used throughout the framework."""
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return dp, "model"

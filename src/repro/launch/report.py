@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report --art-dir artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+
+from .roofline import load_artifacts, terms
+
+
+def dryrun_table(arts, mesh):
+    rows = ["| arch | shape | kind | devices | compile_s | flops/dev "
+            "| bytes/dev | coll B/dev | mem/dev GiB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in sorted(arts, key=lambda a: (a["arch"], a["shape"])):
+        if (a["mesh"] != mesh or a.get("q_overrides") or a.get("a_overrides")
+                or a.get("preset", "full8") != "full8"):
+            continue
+        mem = a["mem_analysis"].get("peak_bytes_est", 0) / 2 ** 30
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['kind']} | {a['devices']} "
+            f"| {a['compile_s']:.0f} | {a['flops_per_device']:.2e} "
+            f"| {a['bytes_per_device']:.2e} "
+            f"| {a['collective_bytes_per_device']:.2e} | {mem:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(arts, mesh="single"):
+    rows = ["| arch | shape | compute_s | compute_s(int8) | memory_s "
+            "| collective_s | dominant | frac(bf16) | useful | next lever |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for a in sorted(arts, key=lambda a: (a["arch"], a["shape"])):
+        if (a["mesh"] != mesh or a.get("q_overrides") or a.get("a_overrides")
+                or a.get("preset", "full8") != "full8"):
+            continue
+        t = terms(a)
+        lever = {
+            "memory": "fuse quantize chains / 16-bit carriers / fewer "
+                      "elementwise passes",
+            "collective": "int8 weight gathers + bf16 TP boundaries",
+            "compute": "drop remat recompute / int8 MXU (2x peak)",
+        }[t["dominant"]]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {t['compute_s']:.2e} "
+            f"| {t['compute_int8_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {t['dominant']} "
+            f"| {t['roofline_fraction']:.1%} | {t['useful_ratio']:.2f} "
+            f"| {lever} |")
+    return "\n".join(rows)
+
+
+def variant_table(arts, arch, shape, mesh="single"):
+    """Baseline + tagged variants for one hillclimbed cell."""
+    rows = ["| variant | compute_s | memory_s | collective_s | dominant "
+            "| mem/dev GiB |",
+            "|---|---|---|---|---|---|"]
+    for a in arts:
+        if (a["arch"], a["shape"], a["mesh"]) != (arch, shape, mesh):
+            continue
+        t = terms(a)
+        tag = (",".join(f"{k}={v}" for k, v in
+                        {**a.get("q_overrides", {}),
+                         **a.get("a_overrides", {})}.items()) or "baseline")
+        mem = a["mem_analysis"].get("peak_bytes_est", 0) / 2 ** 30
+        rows.append(f"| {tag} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                    f"| {t['collective_s']:.3e} | {t['dominant']} "
+                    f"| {mem:.2f} |")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--art-dir", default="artifacts/dryrun")
+    p.add_argument("--section", default="all",
+                   choices=["all", "dryrun", "roofline"])
+    args = p.parse_args(argv)
+    arts = load_artifacts(args.art_dir)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run — single pod (16x16 = 256 chips)\n")
+        print(dryrun_table(arts, "single"))
+        print("\n### Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table(arts, "multi"))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single pod)\n")
+        print(roofline_table(arts, "single"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Train-step / serve-step builders + the CLI training driver.
+
+`make_train_step` closes the full WAGEUBN loop: quantized forward, quantized
+backward (inside the model's custom vjps), CQ/Q gradient quantization +
+quantized Momentum + fixed-point update (inside the optimizer).  Stochastic
+rounding keys derive from the step counter => bit-exact restart.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get as get_arch
+from repro.core.qconfig import preset
+from repro.models import build_model
+from repro.optim import (dr_bits_schedule, fixed_point_lr, init_momentum,
+                         momentum_update)
+
+SEED = 17
+
+
+def make_train_step(model, qcfg, labels_tree, lr=0.05, mom=0.75,
+                    dr_bits: int = 8, n_micro: int = 1):
+    """n_micro > 1 accumulates gradients over microbatches (lax.scan) —
+    activation memory scales down by n_micro while the numeric result is
+    the mean-of-microbatch gradients (the paper's G of the full batch)."""
+    lrq = fixed_point_lr(lr, qcfg)
+
+    def train_step(params, opt_state, batch, step_idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(SEED), step_idx)
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch, key)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+            if getattr(model, "mesh", None) is not None:
+                # anchor the microbatch layout: leading dim unsharded, batch
+                # over dp (3-axis meshes mis-partition the reshape+slice)
+                from jax.sharding import NamedSharding, PartitionSpec as PS
+                mb = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(model.mesh,
+                                         PS(None, model.dp,
+                                            *((None,) * (x.ndim - 2))))),
+                    mb)
+
+            def acc_step(g_acc, b_i):
+                (l, _), g = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, b_i, key)
+                return jax.tree.map(jnp.add, g_acc, g), l
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            grads, losses = jax.lax.scan(acc_step, g0, mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+            metrics = {"loss": loss}
+        params, opt_state = momentum_update(
+            qcfg, params, grads, opt_state, labels_tree,
+            jax.random.fold_in(key, 1), lrq, mom=mom, dr_bits=dr_bits)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, tokens):
+        return model.serve_step(params, cache, tokens)
+    return serve_step
+
+
+def make_prefill(model, shape_name):
+    from repro.configs.base import LM_SHAPES
+    s, b, _ = LM_SHAPES[shape_name]
+    a = model.a
+
+    if a.family == "encdec":
+        def prefill(params, frames):
+            return model.prefill(params, frames, s // a.tgt_ratio)
+        return prefill
+    if a.family == "ssm":
+        def prefill(params, tokens):
+            return model.prefill(params, tokens)
+        return prefill
+
+    def prefill(params, tokens):
+        return model.prefill(params, tokens, s)
+    return prefill
+
+
+# --------------------------------------------------------------------------
+# CLI driver (CPU-scale smoke training with the full substrate engaged)
+# --------------------------------------------------------------------------
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser("repro.launch.train")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--preset", default="full8",
+                   choices=["full8", "e2_16", "fp32"])
+    p.add_argument("--mode", default="sim", choices=["fp32", "sim", "native"])
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=0.05)
+    p.add_argument("--reduced", action="store_true",
+                   help="use the reduced smoke config (CPU scale)")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--save-every", type=int, default=25)
+    args = p.parse_args(argv)
+
+    acfg = get_arch(args.arch)
+    if args.reduced:
+        acfg = acfg.reduced()
+    qcfg = preset(args.preset, args.mode if args.preset != "fp32" else None)
+    model = build_model(acfg, qcfg)
+
+    from repro.data import TokenTask
+    task = TokenTask(vocab=acfg.vocab, seq_len=args.seq,
+                     global_batch=args.batch)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt = init_momentum(params)
+    labels_tree = model.labels(params)
+    step_fn = jax.jit(make_train_step(model, qcfg, labels_tree, lr=args.lr),
+                      donate_argnums=(0, 1))
+
+    ckpt = None
+    start = 0
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        ckpt = CheckpointManager(args.ckpt_dir)
+        if ckpt.latest_step() is not None:
+            (params, opt), start, _ = ckpt.restore((params, opt))
+            print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, task.batch(step))
+        params, opt, metrics = step_fn(params, opt, batch,
+                                       jnp.int32(step))
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+        if ckpt and (step + 1) % args.save_every == 0:
+            ckpt.save(step + 1, (params, opt))
+    if ckpt:
+        ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .registry import FAMILIES, build_model
+
+__all__ = ["FAMILIES", "build_model"]

@@ -1,0 +1,307 @@
+"""Zamba2-7b hybrid: Mamba2 backbone + a SHARED attention/MLP block applied
+after every `attn_every` mamba layers (the shared block reuses one set of
+parameters at every application, as in the Zamba papers; per-application
+LoRA deltas are omitted — recorded in DESIGN.md).
+
+Layer layout for L layers, ae = attn_every:
+    [ae mamba] shared_attn [ae mamba] shared_attn ... [tail mamba]
+Scan-over-groups keeps HLO O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qact, qdense, qrmsnorm
+from repro.core.qconfig import QConfig
+from repro.configs.base import ArchConfig, LM_SHAPES
+from . import layers as L
+from . import ssm as S
+
+Array = jax.Array
+
+
+def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
+    """One shared attention+MLP block (pre-norm, GQA, SwiGLU)."""
+    b, s, d = x.shape
+    h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln1"]))
+    qh = qdense(cfg, h, p["wq"]).reshape(b, s, acfg.n_heads, acfg.dh)
+    kh = qdense(cfg, h, p["wk"]).reshape(b, s, acfg.n_kv, acfg.dh)
+    vh = qdense(cfg, h, p["wv"]).reshape(b, s, acfg.n_kv, acfg.dh)
+    new_cache = None
+    if mode == "train":
+        qh = L.rope(qh, pos, acfg.rope_theta)
+        kh = L.rope(kh, pos, acfg.rope_theta)
+        qh, kh, vh = (qact(cfg, "none", t) for t in (qh, kh, vh))
+        o = L.chunked_attention(cfg, qh, kh, vh, causal=True, q_pos=pos,
+                                k_pos=pos, q_chunk=acfg.q_chunk,
+                                kv_chunk=acfg.kv_chunk)
+        new_cache = (L.kv_quantize(kh, 2.0 ** -7),
+                     L.kv_quantize(vh, 2.0 ** -7))
+    else:
+        pvec = pos
+        qh = jax.vmap(lambda xi, pi: L.rope(xi, pi[None], acfg.rope_theta))(
+            qh, pvec)
+        kh = jax.vmap(lambda xi, pi: L.rope(xi, pi[None], acfg.rope_theta))(
+            kh, pvec)
+        qh, kh, vh = (qact(cfg, "none", t) for t in (qh, kh, vh))
+        k8, v8 = cache["k"], cache["v"]
+        ks, vs = cache["k_scale"], cache["v_scale"]
+        bidx = jnp.arange(b)
+        k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
+        v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
+        o = L.decode_attention(cfg, qh, L.kv_dequantize(k8, ks),
+                               L.kv_dequantize(v8, vs), q_pos=pvec,
+                               t_valid=pvec.max() + 1)
+        new_cache = (k8, v8)
+    x = x + qdense(cfg, o.reshape(b, s, -1), p["wo"])
+    h2 = qact(cfg, "none", qrmsnorm(cfg, x, p["ln2"]))
+    x = x + L.swiglu(cfg, h2, p["w_gate"], p["w_up"], p["w_down"], acfg.act)
+    return x, new_cache
+
+
+class Zamba2:
+    def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
+                 dp_axes=("data",), tp_axis="model"):
+        self.a, self.q = acfg, qcfg
+        self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+        ae = acfg.attn_every
+        self.n_groups = acfg.n_layers // ae
+        self.tail = acfg.n_layers - self.n_groups * ae
+
+    def _init_shared(self, key):
+        a, q = self.a, self.q
+        d, dh, h, kv, f = a.d_model, a.dh, a.n_heads, a.n_kv, a.d_ff
+        ks = jax.random.split(key, 8)
+        return {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": L.winit(q, ks[0], (d, h * dh), d),
+            "wk": L.winit(q, ks[1], (d, kv * dh), d),
+            "wv": L.winit(q, ks[2], (d, kv * dh), d),
+            "wo": L.winit(q, ks[3], (h * dh, d), h * dh),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w_gate": L.winit(q, ks[4], (d, f), d),
+            "w_up": L.winit(q, ks[5], (d, f), d),
+            "w_down": L.winit(q, ks[6], (f, d), f),
+        }
+
+    def init(self, key):
+        a = self.a
+        ks = jax.random.split(key, 5)
+        lk = jax.random.split(ks[0], a.n_layers)
+        layers = jax.vmap(lambda k: S.mamba2_init(self.q, a, k))(lk)
+        return {
+            "embed": jax.random.normal(ks[1], (a.vocab_padded, a.d_model),
+                                       jnp.float32) * 0.02,
+            "layers": layers,
+            "shared": self._init_shared(ks[2]),
+            "final_norm": jnp.ones((a.d_model,), jnp.float32),
+            "lm_head": jax.random.normal(ks[3], (a.d_model, a.vocab_padded),
+                                         jnp.float32) * 0.02,
+        }
+
+    def labels(self, params):
+        shared = {"ln1": "gamma", "wq": "w", "wk": "w", "wv": "w", "wo": "w",
+                  "ln2": "gamma", "w_gate": "w", "w_up": "w", "w_down": "w"}
+        return {"embed": "exempt", "layers": S.mamba2_labels(),
+                "shared": shared, "final_norm": "gamma", "lm_head": "exempt"}
+
+    def pspecs(self):
+        dp, tp = self.dp, self.tp
+        layer = {"ln": P(None, None), "in_proj": P(None, dp, tp),
+                 "conv_w": P(None, None, tp), "conv_b": P(None, tp),
+                 "bc_proj": P(None, dp, None), "dt_proj": P(None, dp, tp),
+                 "dt_bias": P(None, tp), "A_log": P(None, tp),
+                 "D_skip": P(None, tp), "ssm_norm": P(None, tp),
+                 "out_proj": P(None, tp, dp)}
+        shared = {"ln1": P(None), "wq": P(dp, tp), "wk": P(dp, tp),
+                  "wv": P(dp, tp), "wo": P(tp, dp), "ln2": P(None),
+                  "w_gate": P(dp, tp), "w_up": P(dp, tp),
+                  "w_down": P(tp, dp)}
+        return {"embed": P(None, tp), "layers": layer, "shared": shared,
+                "final_norm": P(None), "lm_head": P(None, tp)}
+
+    def _split_groups(self, tree):
+        """Stacked (L, ...) mamba arrays -> ((G, ae, ...), (tail, ...))."""
+        g, ae = self.n_groups, self.a.attn_every
+        head = jax.tree.map(
+            lambda t: t[: g * ae].reshape((g, ae) + t.shape[1:]), tree)
+        tail = jax.tree.map(lambda t: t[g * ae:], tree)
+        return head, tail
+
+    def _backbone(self, params, x, pos, mode, cache=None):
+        a, q = self.a, self.q
+        head, tail = self._split_groups(params["layers"])
+        shared = params["shared"]
+        emit = cache == "emit"
+
+        def mamba_scan(x, group_params, states):
+            if mode == "train":
+                def mbody(h, lp):
+                    h = L.constrain(self.mesh, h, P(self.dp, None, None))
+                    h2, st = S.mamba2_block(q, a, lp, h, "train")
+                    return h2, st
+                mbody = L.maybe_remat(a, mbody)
+                return L.lscan(a, mbody, x, group_params)
+
+            def mbody(h, xs):
+                lp, sc, sh = xs
+                h2, ns = S.mamba2_block(q, a, lp, h, "decode",
+                                        {"conv": sc, "h": sh})
+                return h2, (ns["conv"], ns["h"])
+            return L.lscan(a, mbody, x,
+                           (group_params, states["conv"], states["h"]))
+
+        if mode == "train":
+            def gbody(h, xs):
+                gp = xs
+                h, sts = mamba_scan(h, gp, None)
+                h, kv = _attn_shared(q, a, shared, h, pos, "train",
+                                     "emit" if emit else None)
+                return h, (sts, kv)
+            gbody = L.maybe_remat(a, gbody)
+            x, (g_states, g_kv) = L.lscan(a, gbody, x, head)
+            t_states = None
+            if self.tail:
+                def tbody(h, lp):
+                    h2, st = S.mamba2_block(q, a, lp, h, "train")
+                    return h2, st
+                tbody = L.maybe_remat(a, tbody)
+                x, t_states = L.lscan(a, tbody, x, tail)
+            return x, (g_states, g_kv, t_states)
+
+        # decode
+        def gbody(h, xs):
+            gp, st_c, st_h, ck, cv = xs
+            h, (nc, nh) = mamba_scan(h, gp, {"conv": st_c, "h": st_h})
+            lc = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
+                  "v_scale": cache["v_scale"][0]}
+            h, (nk, nv) = _attn_shared(q, a, shared, h, pos, "decode", lc)
+            return h, (nc, nh, nk, nv)
+
+        g, ae = self.n_groups, a.attn_every
+        mc = cache["m_conv"][: g * ae].reshape((g, ae) +
+                                               cache["m_conv"].shape[1:])
+        mh = cache["m_h"][: g * ae].reshape((g, ae) + cache["m_h"].shape[1:])
+        x, (nc, nh, nk, nv) = L.lscan(
+            a, gbody, x, (head, mc, mh, cache["k"], cache["v"]))
+        nc = nc.reshape((-1,) + nc.shape[2:])
+        nh = nh.reshape((-1,) + nh.shape[2:])
+        if self.tail:
+            def tbody(h, xs):
+                lp, sc, sh = xs
+                h2, ns = S.mamba2_block(q, a, lp, h, "decode",
+                                        {"conv": sc, "h": sh})
+                return h2, (ns["conv"], ns["h"])
+            x, (tc, th) = L.lscan(
+                a, tbody, x, (tail, cache["m_conv"][g * ae:],
+                              cache["m_h"][g * ae:]))
+            nc = jnp.concatenate([nc, tc], 0)
+            nh = jnp.concatenate([nh, th], 0)
+        new_cache = dict(cache, m_conv=nc, m_h=nh, k=nk, v=nv,
+                         pos=cache["pos"] + 1)
+        return x, new_cache
+
+    def _logits(self, params, x):
+        h = qrmsnorm(self.q, x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+        logits = L.constrain(self.mesh, logits, P(self.dp, None, self.tp))
+        if self.a.vocab_padded != self.a.vocab:
+            pad = jnp.arange(self.a.vocab_padded) >= self.a.vocab
+            logits = jnp.where(pad, L.NEG_INF, logits)
+        return logits
+
+    def loss(self, params, batch, key=None):
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = params["embed"][tokens]
+        pos = jnp.arange(tokens.shape[1])
+        x, _ = self._backbone(params, x, pos, "train")
+        logits = self._logits(params, x)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = L.target_logit(logits, labels)
+        loss = jnp.mean(lse - tgt)
+        return loss, {"loss": loss}
+
+    def init_cache(self, b, t):
+        a = self.a
+        di, n = a.d_inner, a.ssm_state
+        hm = di // a.headdim
+        return {
+            "m_conv": jnp.zeros((a.n_layers, b, a.d_conv - 1, di),
+                                jnp.float32),
+            "m_h": jnp.zeros((a.n_layers, b, hm, n, a.headdim), jnp.float32),
+            "k": jnp.zeros((self.n_groups, b, t, a.n_kv, a.dh), jnp.int8),
+            "v": jnp.zeros((self.n_groups, b, t, a.n_kv, a.dh), jnp.int8),
+            "k_scale": jnp.full((self.n_groups,), 2.0 ** -7, jnp.float32),
+            "v_scale": jnp.full((self.n_groups,), 2.0 ** -7, jnp.float32),
+            "pos": jnp.zeros((b,), jnp.int32),
+        }
+
+    def prefill(self, params, tokens, cache_len):
+        a = self.a
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        pos = jnp.arange(s)
+        x, (g_states, g_kv, t_states) = self._backbone(
+            params, x, pos, "train", cache="emit")
+        cache = self.init_cache(b, cache_len)
+        gc = g_states
+        nc = gc["conv"].reshape((-1,) + gc["conv"].shape[2:])
+        nh = gc["h"].reshape((-1,) + gc["h"].shape[2:])
+        if self.tail:
+            nc = jnp.concatenate([nc, t_states["conv"]], 0)
+            nh = jnp.concatenate([nh, t_states["h"]], 0)
+        k8, v8 = g_kv
+        cache.update(m_conv=nc, m_h=nh,
+                     k=cache["k"].at[:, :, :s].set(k8),
+                     v=cache["v"].at[:, :, :s].set(v8),
+                     pos=jnp.full((b,), s, jnp.int32))
+        return cache, self._logits(params, x[:, -1:])[:, 0]
+
+    def serve_step(self, params, cache, tokens):
+        x = params["embed"][tokens][:, None, :]
+        x, cache = self._backbone(params, x, cache["pos"], "decode", cache)
+        return cache, self._logits(params, x)[:, 0]
+
+    def batch_pspec(self):
+        return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}
+
+    def cache_pspec(self, long=False):
+        dp, tp = self.dp, self.tp
+        bdim = None if long else dp
+        tdim = ("data", tp) if long else tp
+        return {"m_conv": P(None, bdim, None, tp),
+                "m_h": P(None, bdim, tp, None, None),
+                "k": P(None, bdim, tdim, None, None),
+                "v": P(None, bdim, tdim, None, None),
+                "k_scale": P(None), "v_scale": P(None), "pos": P(None)}
+
+    def input_specs(self, shape_name, sb=None):
+        s, b, kind = LM_SHAPES[shape_name]
+        if sb is not None:
+            s, b = sb
+        a = self.a
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            return {"tokens": tok, "labels": tok}, "train"
+        if kind == "prefill":
+            return {"tokens": tok}, "prefill"
+        di, n = a.d_inner, a.ssm_state
+        hm = di // a.headdim
+        cache = {
+            "m_conv": jax.ShapeDtypeStruct(
+                (a.n_layers, b, a.d_conv - 1, di), jnp.float32),
+            "m_h": jax.ShapeDtypeStruct((a.n_layers, b, hm, n, a.headdim),
+                                        jnp.float32),
+            "k": jax.ShapeDtypeStruct((self.n_groups, b, s, a.n_kv, a.dh),
+                                      jnp.int8),
+            "v": jax.ShapeDtypeStruct((self.n_groups, b, s, a.n_kv, a.dh),
+                                      jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((self.n_groups,), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((self.n_groups,), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}, "decode"

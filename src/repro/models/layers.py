@@ -1,0 +1,241 @@
+"""Shared model building blocks: RoPE, GQA attention (chunked / cached),
+SwiGLU MLP, initializers — all built on the WAGEUBN quantized ops.
+
+Attention adaptation of the paper's scheme (DESIGN.md §3): QK^T and PV are
+activation-activation int8 matmuls (error quantizer = e_attn_kind, default
+sq8); softmax logits run on the fp32 VPU; probabilities are quantized onto
+the k_A grid (they live in [0,1], where direct quantization is exact-range).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import qact, qdense, qeinsum, qprobs, qrmsnorm, qlayernorm
+from repro.core import qfuncs as qf
+from repro.core.qconfig import QConfig
+
+Array = jax.Array
+
+NEG_INF = -1e9
+
+
+def target_logit(logits, labels):
+    """Gather labels' logits WITHOUT all-gathering a vocab-sharded tensor:
+    a masked sum partitions cleanly (local mask + tiny (B,S) all-reduce),
+    where take_along_axis would gather the full logits to every device."""
+    iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    mask = iota == labels[..., None]
+    return jnp.sum(jnp.where(mask, logits, 0.0), axis=-1)
+
+
+def constrain(mesh, x, spec):
+    """Anchor intermediate sharding (3-axis meshes defeat propagation)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def maybe_remat(acfg, fn):
+    if getattr(acfg, "remat", "full") == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def lscan(acfg, body, init, xs):
+    """scan-over-layers honoring acfg.unroll_layers (cost-exact compiles)."""
+    return lax.scan(body, init, xs, unroll=(True if acfg.unroll_layers
+                                            else 1))
+
+
+# --------------------------------------------------------------------------
+# init (paper Eq. 9: MSRA + k_WU-grid discretization)
+# --------------------------------------------------------------------------
+
+
+def winit(cfg: QConfig, key, shape, fan_in: int) -> Array:
+    w = jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+    if cfg.quantize:
+        lim = 1.0 - qf.d(cfg.k_wu)
+        w = jnp.clip(qf.q_direct(w, cfg.k_wu), -lim, lim)
+    return w
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope(x: Array, pos: Array, theta: float = 1e4) -> Array:
+    """x: (..., S, H, dh), pos: (S,) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]   # (S, half)
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def _attn_scores(cfg, q, k):
+    """(B,S,KV,G,dh) x (B,T,KV,dh) -> (B,S,KV,G,T) through qeinsum."""
+    return qeinsum(cfg, "bskgd,btkd->bskgt", cfg.e_attn_kind, False, q, k)
+
+
+def _attn_out(cfg, p, v):
+    return qeinsum(cfg, "bskgt,btkd->bskgd", cfg.e_attn_kind, False, p, v)
+
+
+def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
+                      causal: bool, q_pos: Array, k_pos: Array,
+                      q_chunk: int = 1024, kv_chunk: int = 512) -> Array:
+    """Memory-efficient online-softmax attention (pure JAX flash-style).
+
+    q: (B, S, H, dh) on the activation grid; k/v: (B, T, KV, dh).
+    Returns (B, S, H, dh) normalized output on the activation grid.
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    # pad sequence dims up to chunk multiples; padded kv slots are masked out
+    s_orig = s
+    sp = -s % q_chunk
+    tp = -t % kv_chunk
+    if sp:
+        q = jnp.pad(q, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, sp))
+        s += sp
+    k_valid = jnp.ones((t,), bool)
+    if tp:
+        k = jnp.pad(k, ((0, 0), (0, tp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, tp))
+        k_valid = jnp.pad(k_valid, (0, tp))
+        t += tp
+    q = q.reshape(b, s, kv, g, dh)
+
+    nq, nk = s // q_chunk, t // kv_chunk
+
+    kc = k.reshape(b, nk, kv_chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, kv_chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(nk, kv_chunk)
+    kvc = k_valid.reshape(nk, kv_chunk)
+
+    def q_block(qi, qp):
+        # qi: (B, qc, KV, G, dh); qp: (qc,)
+        def kv_step(carry, inp):
+            m, l, o = carry
+            ki, vi, kp, kval = inp
+            sc = _attn_scores(cfg, qi, ki) * scale     # (B,qc,KV,G,kc)
+            mask = kval[None, :] if not causal else (
+                (qp[:, None] >= kp[None, :]) & kval[None, :])
+            sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = qprobs(cfg, p)                         # Q_A on probabilities
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            o = o * alpha[..., None] + _attn_out(cfg, p, vi)
+            return (m_new, l, o), None
+
+        m0 = jnp.full(qi.shape[:-1], NEG_INF, jnp.float32)
+        l0 = jnp.zeros(qi.shape[:-1], jnp.float32)
+        o0 = jnp.zeros(qi.shape, jnp.float32)
+        (m, l, o), _ = lax.scan(kv_step, (m0, l0, o0), (kc, vc, kpc, kvc))
+        return o / jnp.maximum(l, 1e-9)[..., None]
+
+    qb = q.reshape(b, nq, q_chunk, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(nq, q_chunk)
+    out = lax.map(lambda args: q_block(*args), (qb, qpb))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    out = out[:, :s_orig]
+    return qact(cfg, "none", out)
+
+
+def decode_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
+                     q_pos: Array, t_valid: Array) -> Array:
+    """Single-step attention against a full (possibly int8) KV cache.
+
+    q: (B, 1, H, dh); k/v: (B, T, KV, dh) grid fp32 (already dequantized).
+    t_valid masks cache positions >= current length.
+    """
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(b, s, kv, g, dh)
+    sc = _attn_scores(cfg, qr, k) * scale              # (B,1,KV,G,T)
+    kp = jnp.arange(t)
+    mask = (kp[None, :] <= q_pos[:, None]) & (kp[None, :] < t_valid)
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = qprobs(cfg, p / jnp.sum(p, axis=-1, keepdims=True))
+    out = _attn_out(cfg, p, v).reshape(b, s, h, dh)
+    return qact(cfg, "none", out)
+
+
+# --------------------------------------------------------------------------
+# int8 KV cache
+# --------------------------------------------------------------------------
+
+
+def kv_cache_init(n_layers: int, b: int, t: int, kv: int, dh: int):
+    """int8 cache + per-layer pow2 scales (paper k_A applied to the cache)."""
+    return {
+        "k": jnp.zeros((n_layers, b, t, kv, dh), jnp.int8),
+        "v": jnp.zeros((n_layers, b, t, kv, dh), jnp.int8),
+        "k_scale": jnp.full((n_layers,), 2.0 ** -7, jnp.float32),
+        "v_scale": jnp.full((n_layers,), 2.0 ** -7, jnp.float32),
+        "pos": jnp.zeros((b,), jnp.int32),
+    }
+
+
+def kv_quantize(x: Array, step: Array):
+    return jnp.clip(jnp.round(x / step), -127, 127).astype(jnp.int8)
+
+
+def kv_dequantize(x8: Array, step: Array) -> Array:
+    return x8.astype(jnp.float32) * step
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def swiglu(cfg: QConfig, x: Array, w_gate: Array, w_up: Array,
+           w_down: Array, act: str = "silu") -> Array:
+    gate = qact(cfg, act, qdense(cfg, x, w_gate))
+    up = qact(cfg, "none", qdense(cfg, x, w_up))
+    h = qact(cfg, "none", gate * up)
+    return qdense(cfg, h, w_down)
+
+
+def mlp(cfg: QConfig, x: Array, w_up: Array, w_down: Array,
+        act: str = "gelu") -> Array:
+    h = qact(cfg, act, qdense(cfg, x, w_up))
+    return qdense(cfg, h, w_down)
+
+
+def norm(cfg: QConfig, kind: str, x: Array, gamma: Array,
+         beta: Array | None = None) -> Array:
+    if kind == "rmsnorm":
+        return qrmsnorm(cfg, x, gamma)
+    return qlayernorm(cfg, x, gamma, beta)

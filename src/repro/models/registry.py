@@ -1,0 +1,27 @@
+"""Model registry: family string -> model class."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.core.qconfig import QConfig
+
+from .transformer import LMTransformer
+from .ssm_lm import SSMLM
+from .hybrid import Zamba2
+from .encdec import EncDec
+from .resnet import ResNet
+
+FAMILIES = {
+    "lm": LMTransformer,       # dense decoder-only
+    "vlm": LMTransformer,      # chameleon: early-fusion VQ tokens = vocab ids
+    "moe": LMTransformer,      # MoE FFN selected via acfg.moe_experts
+    "ssm": SSMLM,
+    "hybrid": Zamba2,
+    "encdec": EncDec,
+    "resnet": ResNet,
+}
+
+
+def build_model(acfg: ArchConfig, qcfg: QConfig, mesh=None,
+                dp_axes=("data",), tp_axis="model"):
+    cls = FAMILIES[acfg.family]
+    return cls(acfg, qcfg, mesh=mesh, dp_axes=dp_axes, tp_axis=tp_axis)

@@ -1,0 +1,306 @@
+"""State-space models: Mamba1 (falcon-mamba-7b) and Mamba2/SSD (zamba2-7b).
+
+TPU adaptation (DESIGN.md §3/§6): all projections are WAGEUBN int8 matmuls;
+the selective-scan recurrence runs on the fp32 VPU over 16-bit-gridded
+inputs (INT8 states collapse under long product chains; the paper's k_BN=16
+precedent applies).  Mamba2's SSD chunk formulation is matmul-based, so its
+intra-chunk score/combine matmuls DO go through qeinsum (int8 MXU) — a
+beyond-paper extension recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import qact, qdense, qeinsum, qweight, qbn_param, qrmsnorm
+from repro.core.qconfig import QConfig
+from repro.configs.base import ArchConfig
+from . import layers as L
+
+Array = jax.Array
+
+
+def causal_conv1d(cfg, x, w, b):
+    """Depthwise causal conv over seq.  x: (B,S,C), w: (K,C), b: (C,)."""
+    k = w.shape[0]
+    wq = qweight(cfg, w)
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = lax.conv_general_dilated(
+        xp, wq[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return y + b
+
+
+# ==========================================================================
+# Mamba1
+# ==========================================================================
+
+
+def mamba1_init(cfg: QConfig, acfg: ArchConfig, key):
+    d, di, n = acfg.d_model, acfg.d_inner, acfg.ssm_state
+    r = max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (di,), minval=math.log(1e-3),
+                                    maxval=math.log(1e-1)))
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "in_proj": L.winit(cfg, ks[0], (d, 2 * di), d),
+        "conv_w": L.winit(cfg, ks[1], (acfg.d_conv, di), acfg.d_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.winit(cfg, ks[2], (di, r + 2 * n), di),
+        "dt_proj": L.winit(cfg, ks[3], (r, di), r),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": L.winit(cfg, ks[4], (di, d), di),
+    }
+
+
+def mamba1_labels():
+    return {"ln": "gamma", "in_proj": "w", "conv_w": "w", "conv_b": "beta",
+            "x_proj": "w", "dt_proj": "w", "dt_bias": "exempt",
+            "A_log": "exempt", "D_skip": "exempt", "out_proj": "w"}
+
+
+def _sscan_chunked(a, b, c_coef, h0, chunk, unroll=False):
+    """Selective scan h_t = a_t h_{t-1} + b_t, y_t = <c_t, h_t>.
+
+    a, b: (B,S,d,N); c_coef: (B,S,N).  Chunked associative scan.
+    Returns (y: (B,S,d), h_last: (B,d,N)).
+    """
+    bsz, s, d, n = a.shape
+    chunk = min(chunk, s)
+    pad = -s % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_coef = jnp.pad(c_coef, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // chunk
+    ac = a.reshape(bsz, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(bsz, nc, chunk, d, n).transpose(1, 0, 2, 3, 4)
+    cc = c_coef.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def op(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    def body(h, inp):
+        ai, bi, ci = inp
+        acum, bcum = lax.associative_scan(op, (ai, bi), axis=1)
+        h_all = acum * h[:, None] + bcum            # (B,c,d,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, ci)
+        return h_all[:, -1], y
+
+    h_last, ys = lax.scan(body, h0, (ac, bc, cc),
+                          unroll=(True if unroll else 1))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, nc * chunk, d)
+    return y[:, :s], h_last
+
+
+def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
+    """x: (B,S,D).  mode 'train' (state ignored) or 'decode' (S==1)."""
+    bsz, s, d = x.shape
+    di, n = acfg.d_inner, acfg.ssm_state
+    r = max(d // 16, 1)
+    h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln"]))
+    xz = qdense(cfg, h, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    new_state = None
+    if mode == "train":
+        xc = causal_conv1d(cfg, xi, p["conv_w"], p["conv_b"])
+    else:
+        conv_s = state["conv"]                       # (B, K-1, di)
+        window = jnp.concatenate([conv_s, xi], axis=1)
+        wq = qweight(cfg, p["conv_w"])
+        xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
+        new_conv = window[:, 1:]
+    xc = qact(cfg, "silu", xc)
+
+    meta = qdense(cfg, xc, p["x_proj"])
+    dtr, bs, cs = jnp.split(meta, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(qdense(cfg, qact(cfg, "none", dtr), p["dt_proj"])
+                         + p["dt_bias"])
+    dt = qbn_param(cfg, dt, cfg.k_bn)                # 16-bit grid (DESIGN §3)
+    bs = qbn_param(cfg, bs, cfg.k_bn)
+    cs = qbn_param(cfg, cs, cfg.k_bn)
+    a_mat = -jnp.exp(p["A_log"])                     # (di, N)
+
+    if mode == "train":
+        sdt = jnp.bfloat16 if cfg.scan_dtype == "bf16" else jnp.float32
+        a = jnp.exp(dt[..., None] * a_mat).astype(sdt)   # (B,S,di,N)
+        b = ((dt * xc)[..., None] * bs[:, :, None, :]).astype(sdt)
+        h0 = jnp.zeros((bsz, di, n), sdt)
+        y, h_last = _sscan_chunked(a, b, cs.astype(sdt), h0,
+                                   chunk=acfg.scan_chunk,
+                                   unroll=acfg.unroll_scan_chunks)
+        y = y.astype(jnp.float32)
+        kc = acfg.d_conv - 1
+        conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
+                     if s < kc else xi[:, s - kc:])
+        new_state = {"conv": conv_tail, "h": h_last}
+    else:
+        hs = state["h"]                              # (B, di, N)
+        a1 = jnp.exp(dt[:, 0, :, None] * a_mat)
+        b1 = (dt * xc)[:, 0, :, None] * bs[:, 0, None, :]
+        hs = a1 * hs + b1
+        y = jnp.einsum("bdn,bn->bd", hs, cs[:, 0])[:, None]
+        new_state = {"conv": new_conv, "h": hs}
+
+    y = y + p["D_skip"] * xc
+    y = y * qact(cfg, "silu", z)
+    out = qdense(cfg, qact(cfg, "none", y), p["out_proj"])
+    return x + out, new_state
+
+
+def mamba1_state_init(acfg: ArchConfig, bsz):
+    di, n = acfg.d_inner, acfg.ssm_state
+    return {"conv": jnp.zeros((bsz, acfg.d_conv - 1, di), jnp.float32),
+            "h": jnp.zeros((bsz, di, n), jnp.float32)}
+
+
+# ==========================================================================
+# Mamba2 (SSD)
+# ==========================================================================
+
+
+def mamba2_init(cfg: QConfig, acfg: ArchConfig, key):
+    d, di, n = acfg.d_model, acfg.d_inner, acfg.ssm_state
+    hm = di // acfg.headdim
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (hm,), minval=math.log(1e-3),
+                                    maxval=math.log(1e-1)))
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "in_proj": L.winit(cfg, ks[0], (d, 2 * di), d),
+        "conv_w": L.winit(cfg, ks[1], (acfg.d_conv, di), acfg.d_conv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "bc_proj": L.winit(cfg, ks[2], (d, 2 * n), d),
+        "dt_proj": L.winit(cfg, ks[3], (d, hm), d),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "A_log": jnp.zeros((hm,), jnp.float32),
+        "D_skip": jnp.ones((hm,), jnp.float32),
+        "ssm_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": L.winit(cfg, ks[4], (di, d), di),
+    }
+
+
+def mamba2_labels():
+    return {"ln": "gamma", "in_proj": "w", "conv_w": "w", "conv_b": "beta",
+            "bc_proj": "w", "dt_proj": "w", "dt_bias": "exempt",
+            "A_log": "exempt", "D_skip": "exempt", "ssm_norm": "gamma",
+            "out_proj": "w"}
+
+
+def _segsum_decay(alog):
+    """alog: (B,c,H) per-step log decays -> cumulative sums for SSD."""
+    return jnp.cumsum(alog, axis=1)
+
+
+def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
+                 chunk: int | None = None):
+    bsz, s, d = x.shape
+    di, n = acfg.d_inner, acfg.ssm_state
+    pdim = acfg.headdim
+    hm = di // pdim
+
+    h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln"]))
+    xz = qdense(cfg, h, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    bc = qdense(cfg, h, p["bc_proj"])
+    bs, cs = jnp.split(bc, 2, axis=-1)                 # (B,S,N) each
+    bs = qbn_param(cfg, bs, cfg.k_bn)
+    cs = qbn_param(cfg, cs, cfg.k_bn)
+    dt = jax.nn.softplus(qdense(cfg, h, p["dt_proj"]) + p["dt_bias"])
+    dt = qbn_param(cfg, dt, cfg.k_bn)                  # (B,S,Hm)
+    a_neg = -jnp.exp(p["A_log"])                       # (Hm,)
+
+    new_state = None
+    if chunk is None:
+        chunk = acfg.scan_chunk
+    if mode == "train":
+        xc = qact(cfg, "silu", causal_conv1d(cfg, xi, p["conv_w"],
+                                             p["conv_b"]))
+        xh = xc.reshape(bsz, s, hm, pdim)
+        alog = dt * a_neg                              # (B,S,Hm) log decays
+        chunk = min(chunk, s)
+        pad = -s % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_, alog_, bs_, cs_ = (jnp.pad(t, ((0, 0), (0, pad)) +
+                                            ((0, 0),) * (t.ndim - 2))
+                                    for t in (dt, alog, bs, cs))
+        else:
+            dt_, alog_, bs_, cs_ = dt, alog, bs, cs
+        nc = (s + pad) // chunk
+        xhc = xh.reshape(bsz, nc, chunk, hm, pdim).transpose(1, 0, 2, 3, 4)
+        dtc = dt_.reshape(bsz, nc, chunk, hm).transpose(1, 0, 2, 3)
+        alc = alog_.reshape(bsz, nc, chunk, hm).transpose(1, 0, 2, 3)
+        bsc = bs_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+        csc = cs_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+        def body(s0, inp):
+            xcb, dtb, alb, bsb, csb = inp
+            cum = _segsum_decay(alb)                   # (B,c,Hm)
+            # intra-chunk: quantized score matmul (beyond-paper INT8 SSD)
+            scores = qeinsum(cfg, "btn,bsn->bts", cfg.e_attn_kind, False, csb, bsb)
+            ldec = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :],
+                                    -60.0, 0.0))
+            tt = jnp.arange(xcb.shape[1])
+            causal = (tt[:, None] >= tt[None, :])[None, :, :, None]
+            m = scores[:, :, :, None] * ldec * dtb[:, None, :, :] * causal
+            m = qact(cfg, "none", m)
+            y_in = qeinsum(cfg, "btsh,bshp->bthp", cfg.e_attn_kind, False, m, xcb)
+            # inter-chunk
+            dec0 = jnp.exp(cum)                        # (B,c,Hm)
+            y_x = jnp.einsum("btn,bhnp->bthp", csb, s0) * dec0[..., None]
+            # state update
+            dec_end = jnp.exp(jnp.clip(cum[:, -1:, :] - cum, -60.0, 0.0))
+            wx = xcb * (dtb * dec_end)[..., None]
+            s_new = (jnp.exp(cum[:, -1])[:, :, None, None] * s0
+                     + jnp.einsum("bsn,bshp->bhnp", bsb, wx))
+            return s_new, y_in + y_x
+
+        s0 = jnp.zeros((bsz, hm, n, pdim), jnp.float32)
+        s_last, ys = lax.scan(body, s0, (xhc, dtc, alc, bsc, csc),
+                              unroll=(True if acfg.unroll_scan_chunks
+                                      else 1))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, hm, pdim)
+        y = y[:, :s]
+        xh = xh[:, :s]
+        kc = acfg.d_conv - 1
+        conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
+                     if s < kc else xi[:, s - kc:])
+        new_state = {"conv": conv_tail, "h": s_last}
+    else:
+        conv_s = state["conv"]
+        window = jnp.concatenate([conv_s, xi], axis=1)
+        wq = qweight(cfg, p["conv_w"])
+        xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
+        xc = qact(cfg, "silu", xc)
+        xh = xc.reshape(bsz, 1, hm, pdim)
+        ss = state["h"]                                # (B,Hm,N,P)
+        dt1 = dt[:, 0]                                 # (B,Hm)
+        dec = jnp.exp(dt1 * a_neg)[:, :, None, None]
+        upd = jnp.einsum("bn,bhp->bhnp", bs[:, 0], xh[:, 0] * dt1[..., None])
+        ss = dec * ss + upd
+        y = jnp.einsum("bn,bhnp->bhp", cs[:, 0], ss)[:, None]
+        new_state = {"conv": window[:, 1:], "h": ss}
+
+    y = y + p["D_skip"][:, None] * xh
+    y = y.reshape(bsz, -1, di)
+    y = qrmsnorm(cfg, y, p["ssm_norm"]) * qact(cfg, "silu", z)
+    out = qdense(cfg, qact(cfg, "none", y), p["out_proj"])
+    return x + out, new_state
+
+
+def mamba2_state_init(acfg: ArchConfig, bsz):
+    di, n = acfg.d_inner, acfg.ssm_state
+    hm = di // acfg.headdim
+    return {"conv": jnp.zeros((bsz, acfg.d_conv - 1, di), jnp.float32),
+            "h": jnp.zeros((bsz, hm, n, acfg.headdim), jnp.float32)}

@@ -1,0 +1,136 @@
+"""Pure-SSM LM (falcon-mamba-7b): stacked Mamba1 blocks, O(1) decode state."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qconfig import QConfig
+from repro.configs.base import ArchConfig, LM_SHAPES
+from . import layers as L
+from . import ssm as S
+
+
+class SSMLM:
+    def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
+                 dp_axes=("data",), tp_axis="model"):
+        self.a, self.q = acfg, qcfg
+        self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+
+    def init(self, key):
+        a = self.a
+        ks = jax.random.split(key, 4)
+        lk = jax.random.split(ks[0], a.n_layers)
+        layers = jax.vmap(lambda k: S.mamba1_init(self.q, a, k))(lk)
+        return {
+            "embed": jax.random.normal(ks[1], (a.vocab_padded, a.d_model),
+                                       jnp.float32) * 0.02,
+            "layers": layers,
+            "final_norm": jnp.ones((a.d_model,), jnp.float32),
+            "lm_head": jax.random.normal(ks[2], (a.d_model, a.vocab_padded),
+                                         jnp.float32) * 0.02,
+        }
+
+    def labels(self, params):
+        return {"embed": "exempt", "layers": S.mamba1_labels(),
+                "final_norm": "gamma", "lm_head": "exempt"}
+
+    def pspecs(self):
+        dp, tp = self.dp, self.tp
+        layer = {"ln": P(None, None), "in_proj": P(None, dp, tp),
+                 "conv_w": P(None, None, tp), "conv_b": P(None, tp),
+                 "x_proj": P(None, tp, None), "dt_proj": P(None, None, tp),
+                 "dt_bias": P(None, tp), "A_log": P(None, tp, None),
+                 "D_skip": P(None, tp), "out_proj": P(None, tp, dp)}
+        return {"embed": P(None, tp), "layers": layer,
+                "final_norm": P(None), "lm_head": P(None, tp)}
+
+    def _backbone(self, params, x, mode, state=None):
+        if mode == "train":
+            def body(h, lp):
+                h = L.constrain(self.mesh, h, P(self.dp, None, None))
+                h2, st = S.mamba1_block(self.q, self.a, lp, h, "train")
+                return h2, st
+            body = L.maybe_remat(self.a, body)
+            x, states = L.lscan(self.a, body, x, params["layers"])
+            return x, states
+
+        def body(h, xs):
+            lp, st_c, st_h = xs
+            h2, ns = S.mamba1_block(self.q, self.a, lp, h, "decode",
+                                    {"conv": st_c, "h": st_h})
+            return h2, (ns["conv"], ns["h"])
+        x, (nc, nh) = L.lscan(self.a, body, x,
+                              (params["layers"], state["conv"], state["h"]))
+        return x, {"conv": nc, "h": nh, "pos": state["pos"] + 1}
+
+    def _logits(self, params, x):
+        from repro.core import qrmsnorm
+        h = qrmsnorm(self.q, x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+        logits = L.constrain(self.mesh, logits, P(self.dp, None, self.tp))
+        if self.a.vocab_padded != self.a.vocab:
+            pad = jnp.arange(self.a.vocab_padded) >= self.a.vocab
+            logits = jnp.where(pad, L.NEG_INF, logits)
+        return logits
+
+    def loss(self, params, batch, key=None):
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = params["embed"][tokens]
+        x, _ = self._backbone(params, x, "train")
+        logits = self._logits(params, x)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = L.target_logit(logits, labels)
+        loss = jnp.mean(lse - tgt)
+        return loss, {"loss": loss}
+
+    def init_state(self, bsz):
+        a = self.a
+        st = jax.vmap(lambda _: S.mamba1_state_init(a, bsz))(
+            jnp.arange(a.n_layers))
+        return {"conv": st["conv"], "h": st["h"],
+                "pos": jnp.zeros((bsz,), jnp.int32)}
+
+    def serve_step(self, params, state, tokens):
+        x = params["embed"][tokens][:, None, :]
+        x, state = self._backbone(params, x, "decode", state)
+        return state, self._logits(params, x)[:, 0]
+
+    def batch_pspec(self):
+        return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}
+
+    def cache_pspec(self, long=False):
+        dp, tp = self.dp, self.tp
+        bdim = None if long else dp   # long_500k has batch 1
+        return {"conv": P(None, bdim, None, tp),
+                "h": P(None, bdim, tp, None), "pos": P(None)}
+
+    def input_specs(self, shape_name, sb=None):
+        s, b, kind = LM_SHAPES[shape_name]
+        if sb is not None:
+            s, b = sb
+        a = self.a
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            return {"tokens": tok, "labels": tok}, "train"
+        if kind == "prefill":
+            return {"tokens": tok}, "prefill"
+        di, n = a.d_inner, a.ssm_state
+        state = {
+            "conv": jax.ShapeDtypeStruct((a.n_layers, b, a.d_conv - 1, di),
+                                         jnp.float32),
+            "h": jax.ShapeDtypeStruct((a.n_layers, b, di, n), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+        return {"cache": state,
+                "tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}, "decode"
+
+    def prefill(self, params, tokens, cache_len=None):
+        """Parallel (chunked-scan) prefill; emits per-layer SSM states."""
+        bsz, s = tokens.shape
+        x = params["embed"][tokens]
+        x, states = self._backbone(params, x, "train")
+        state = {"conv": states["conv"], "h": states["h"],
+                 "pos": jnp.full((bsz,), s, jnp.int32)}
+        return state, self._logits(params, x[:, -1:])[:, 0]

@@ -1,0 +1,267 @@
+"""Decoder-only LM (dense / GQA / MoE): chameleon-34b, granite-moe,
+moonshot, granite-3-8b, phi4-mini, minitron, granite-34b.
+
+Scan-over-layers with per-layer remat keeps the HLO O(1) in depth.  The
+embedding and lm_head are exempt from quantization (the paper's first/last
+layer rule); every hidden matmul, norm, and activation goes through the
+WAGEUBN ops.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import qact, qdense, qweight
+from repro.core.qconfig import QConfig
+from repro.configs.base import ArchConfig, LM_SHAPES
+from . import layers as L
+from . import moe as MOE
+
+Array = jax.Array
+
+
+class LMTransformer:
+    def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
+                 dp_axes=("data",), tp_axis="model"):
+        self.a, self.q = acfg, qcfg
+        self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+
+    # ---------------- params ----------------
+
+    def _init_layer(self, key):
+        a, q = self.a, self.q
+        d, dh, h, kv, f = a.d_model, a.dh, a.n_heads, a.n_kv, a.d_ff
+        ks = jax.random.split(key, 8)
+        p = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": L.winit(q, ks[0], (d, h * dh), d),
+            "wk": L.winit(q, ks[1], (d, kv * dh), d),
+            "wv": L.winit(q, ks[2], (d, kv * dh), d),
+            "wo": L.winit(q, ks[3], (h * dh, d), h * dh),
+            "ln2": jnp.ones((d,), jnp.float32),
+        }
+        if a.moe_experts:
+            p["moe"] = MOE.init_moe_params(q, a, ks[4])
+        else:
+            p["w_gate"] = L.winit(q, ks[4], (d, f), d)
+            p["w_up"] = L.winit(q, ks[5], (d, f), d)
+            p["w_down"] = L.winit(q, ks[6], (f, d), f)
+        return p
+
+    def init(self, key):
+        a = self.a
+        ks = jax.random.split(key, 4)
+        layer_keys = jax.random.split(ks[0], a.n_layers)
+        layers = jax.vmap(self._init_layer)(layer_keys)
+        return {
+            "embed": jax.random.normal(ks[1], (a.vocab_padded, a.d_model),
+                                       jnp.float32) * 0.02,
+            "layers": layers,
+            "final_norm": jnp.ones((a.d_model,), jnp.float32),
+            "lm_head": jax.random.normal(ks[2], (a.d_model, a.vocab_padded),
+                                         jnp.float32) * 0.02,
+        }
+
+    def labels(self, params):
+        layer = {"ln1": "gamma", "wq": "w", "wk": "w", "wv": "w", "wo": "w",
+                 "ln2": "gamma"}
+        if self.a.moe_experts:
+            layer["moe"] = MOE.moe_labels()
+        else:
+            layer.update(w_gate="w", w_up="w", w_down="w")
+        return {"embed": "exempt", "layers": layer, "final_norm": "gamma",
+                "lm_head": "exempt"}
+
+    def pspecs(self):
+        dp, tp = self.dp, self.tp
+        layer = {"ln1": P(None, None), "wq": P(None, dp, tp),
+                 "wk": P(None, dp, None), "wv": P(None, dp, None),
+                 "wo": P(None, tp, dp), "ln2": P(None, None)}
+        if self.a.n_kv % 16 == 0:           # kv heads shardable over tp=16
+            layer["wk"] = P(None, dp, tp)
+            layer["wv"] = P(None, dp, tp)
+        if self.a.moe_experts:
+            layer["moe"] = {k: P(*((None,) + tuple(s)))
+                            for k, s in MOE.moe_pspecs(dp, tp).items()}
+        else:
+            layer.update(w_gate=P(None, dp, tp), w_up=P(None, dp, tp),
+                         w_down=P(None, tp, dp))
+        return {"embed": P(None, tp), "layers": layer,
+                "final_norm": P(None), "lm_head": P(None, tp)}
+
+    # ---------------- forward ----------------
+
+    def _attn(self, p, x, pos, mode, cache=None):
+        a, q = self.a, self.q
+        b, s, d = x.shape
+        h = qact(q, "none", L.norm(q, a.norm, x, p["ln1"]))
+        qh = qdense(q, h, p["wq"]).reshape(b, s, a.n_heads, a.dh)
+        kh = qdense(q, h, p["wk"]).reshape(b, s, a.n_kv, a.dh)
+        vh = qdense(q, h, p["wv"]).reshape(b, s, a.n_kv, a.dh)
+        if mode == "train":
+            pos1 = pos  # (S,)
+            qh = L.rope(qh, pos1, a.rope_theta)
+            kh = L.rope(kh, pos1, a.rope_theta)
+            qh, kh, vh = (qact(q, "none", t) for t in (qh, kh, vh))
+            o = L.chunked_attention(q, qh, kh, vh, causal=True,
+                                    q_pos=pos1, k_pos=pos1,
+                                    q_chunk=a.q_chunk, kv_chunk=a.kv_chunk)
+            new_cache = None
+            if cache == "emit":
+                ks = L.kv_quantize(kh, 2.0 ** -7)
+                vs = L.kv_quantize(vh, 2.0 ** -7)
+                new_cache = (ks, vs)
+        else:  # decode: s == 1, pos: (B,), cache: dict slices for this layer
+            pvec = pos  # (B,)
+            qh = _rope_batched(qh, pvec, a.rope_theta)
+            kh = _rope_batched(kh, pvec, a.rope_theta)
+            qh, kh, vh = (qact(q, "none", t) for t in (qh, kh, vh))
+            k8, v8 = cache["k"], cache["v"]        # (B,T,KV,dh) int8
+            ks, vs = cache["k_scale"], cache["v_scale"]
+            bidx = jnp.arange(b)
+            k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
+            v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
+            kf = L.kv_dequantize(k8, ks)
+            vf = L.kv_dequantize(v8, vs)
+            o = L.decode_attention(q, qh, kf, vf, q_pos=pvec,
+                                   t_valid=pvec.max() + 1)
+            new_cache = (k8, v8)
+        o = o.reshape(b, s, a.n_heads * a.dh)
+        return x + qdense(q, o, p["wo"]), new_cache
+
+    def _ffn(self, p, x):
+        a, q = self.a, self.q
+        h = qact(q, "none", L.norm(q, a.norm, x, p["ln2"]))
+        if a.moe_experts:
+            y = MOE.moe_ffn(q, a, h, p["moe"], self.mesh, self.dp, self.tp)
+        else:
+            y = L.swiglu(q, h, p["w_gate"], p["w_up"], p["w_down"], a.act)
+        return x + y
+
+    def _block(self, p, x, pos, mode, cache=None):
+        from jax.sharding import PartitionSpec as PS
+        x = L.constrain(self.mesh, x, PS(self.dp, None, None))
+        x, new_cache = self._attn(p, x, pos, mode, cache)
+        x = self._ffn(p, x)
+        return x, new_cache
+
+    def _backbone(self, params, x, pos, mode, cache=None):
+        """Scan over layers.  cache: None | 'emit' | dict of stacked arrays."""
+        a = self.a
+
+        if cache is None or cache == "emit":
+            def body(h, lp):
+                h2, c = self._block(lp, h, pos, mode, cache)
+                return h2, c
+            body = L.maybe_remat(self.a, body)
+            x, caches = L.lscan(self.a, body, x, params["layers"])
+            return x, caches
+
+        def body(h, xs):
+            lp, ck, cv = xs
+            layer_cache = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
+                           "v_scale": cache["v_scale"][0]}
+            h2, (nk, nv) = self._block(lp, h, pos, mode, layer_cache)
+            return h2, (nk, nv)
+        x, (nk, nv) = L.lscan(self.a, body, x,
+                              (params["layers"], cache["k"], cache["v"]))
+        return x, {"k": nk, "v": nv, "k_scale": cache["k_scale"],
+                   "v_scale": cache["v_scale"], "pos": cache["pos"] + 1}
+
+    def _logits(self, params, x):
+        h = L.norm(self.q, self.a.norm, x, params["final_norm"])
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+        logits = L.constrain(self.mesh, logits, P(self.dp, None, self.tp))
+        if self.a.vocab_padded != self.a.vocab:
+            pad = jnp.arange(self.a.vocab_padded) >= self.a.vocab
+            logits = jnp.where(pad, L.NEG_INF, logits)
+        return logits
+
+    # ---------------- public API ----------------
+
+    def loss(self, params, batch, key=None):
+        a = self.a
+        tokens, labels = batch["tokens"], batch["labels"]
+        x = params["embed"][tokens]                      # exempt first layer
+        pos = jnp.arange(tokens.shape[1])
+        x, _ = self._backbone(params, x, pos, "train")
+        logits = self._logits(params, x)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = L.target_logit(logits, labels)
+        loss = jnp.mean(lse - tgt)
+        return loss, {"loss": loss}
+
+    def init_cache(self, b, t):
+        a = self.a
+        return L.kv_cache_init(a.n_layers, b, t, a.n_kv, a.dh)
+
+    def prefill(self, params, tokens, cache_len):
+        """Run the prompt, return (cache, last-token logits)."""
+        a = self.a
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        pos = jnp.arange(s)
+        x, caches = self._backbone(params, x, pos, "train", cache="emit")
+        k8, v8 = caches
+        cache = self.init_cache(b, cache_len)
+        cache["k"] = cache["k"].at[:, :, :s].set(k8)
+        cache["v"] = cache["v"].at[:, :, :s].set(v8)
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+        logits = self._logits(params, x[:, -1:])
+        return cache, logits[:, 0]
+
+    def serve_step(self, params, cache, tokens):
+        """tokens: (B,) int32 — one decode step. Returns (cache, logits)."""
+        x = params["embed"][tokens][:, None, :]          # (B,1,D)
+        pos = cache["pos"]
+        x, cache = self._backbone(params, x, pos, "decode", cache)
+        logits = self._logits(params, x)
+        return cache, logits[:, 0]
+
+    # ---------------- dry-run plumbing ----------------
+
+    def batch_pspec(self):
+        return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}
+
+    def cache_pspec(self, long=False):
+        dp, tp = self.dp, self.tp
+        if long:   # batch=1: shard the KV sequence over (data, model)
+            kvspec = P(None, None, ("data", tp), None, None)
+        else:      # batch over dp, KV sequence over model
+            kvspec = P(None, dp, tp, None, None)
+        return {"k": kvspec, "v": kvspec, "k_scale": P(None),
+                "v_scale": P(None), "pos": P(None)}
+
+    def input_specs(self, shape_name, sb=None):
+        s, b, kind = LM_SHAPES[shape_name]
+        if sb is not None:
+            s, b = sb
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            return {"tokens": tok, "labels": tok}, "train"
+        if kind == "prefill":
+            return {"tokens": tok}, "prefill"
+        # decode: cache of seq_len + one token
+        a = self.a
+        cache = {
+            "k": jax.ShapeDtypeStruct((a.n_layers, b, s, a.n_kv, a.dh),
+                                      jnp.int8),
+            "v": jax.ShapeDtypeStruct((a.n_layers, b, s, a.n_kv, a.dh),
+                                      jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((a.n_layers,), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((a.n_layers,), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+        return {"cache": cache,
+                "tokens": jax.ShapeDtypeStruct((b,), jnp.int32)}, "decode"
+
+
+def _rope_batched(x, pos, theta):
+    """x: (B, 1, H, dh); pos: (B,)."""
+    def one(xi, pi):
+        return L.rope(xi, pi[None], theta)
+    return jax.vmap(one)(x, pos)

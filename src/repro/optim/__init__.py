@@ -1,0 +1,5 @@
+from .momentum import (MomentumState, fixed_point_lr, dr_bits_schedule,
+                       init_momentum, momentum_update)
+
+__all__ = ["MomentumState", "fixed_point_lr", "dr_bits_schedule",
+           "init_momentum", "momentum_update"]

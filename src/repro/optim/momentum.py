@@ -1,0 +1,113 @@
+"""Quantized Momentum optimizer + fixed-point updates (paper Eq. 19-24).
+
+Per training step i and layer l:
+    g_q    = CQ(g_W)            (weights, Eq. 5/18 — stochastic rounding)
+           = Q(g, 15)           (gamma/beta, Eq. 18)
+    Acc_i  = Mom * Acc_{i-1,q} + g_q          (Eq. 20)
+    Acc_iq = Q(Acc_i, k_Acc)
+    dW     = lr * Acc_i                        (Eq. 23, lr on the k_lr grid)
+    W     <- clip(Q(W - dW, k_WU), +-(1 - 2^-(k_WU-1)))
+
+Bit-width closure (Eq. 22/24) is asserted by QConfig.validate().
+
+Leaves are classified by a `labels` pytree of strings:
+    "w"      — matmul/conv weights: CQ gradient quantization
+    "gamma" / "beta" — norm parameters: direct 15-bit gradient quantization
+    "exempt" — first/last layers & any fp32-kept leaf: vanilla momentum
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qfuncs as qf
+from repro.core.qconfig import QConfig
+
+
+class MomentumState(NamedTuple):
+    acc: Any           # pytree like params
+    step: jax.Array    # int32 scalar
+
+
+def fixed_point_lr(lr: float, cfg: QConfig) -> float:
+    """Learning rate on the k_lr-bit grid (e.g. 0.05 -> 26*2^-9)."""
+    if not cfg.quantize:
+        return lr
+    s = 2.0 ** (cfg.k_lr - 1)
+    return max(round(lr * s), 1.0) / s
+
+
+def dr_bits_schedule(step: int | jax.Array, boundaries=(), base_bits: int = 8):
+    """dr = 2^(k-1) shrinks at step boundaries (paper §III-C: k 8 -> 7 ...).
+
+    Static python int when `step` is concrete; for traced steps the caller
+    should pass the schedule value in as a static per-epoch constant.
+    """
+    bits = base_bits
+    for b in boundaries:
+        if step >= b:
+            bits -= 1
+    return max(bits, 2)
+
+
+def init_momentum(params: Any) -> MomentumState:
+    acc = jax.tree.map(jnp.zeros_like, params)
+    return MomentumState(acc=acc, step=jnp.zeros((), jnp.int32))
+
+
+def _mom_coeff(cfg: QConfig, mom: float) -> float:
+    if not cfg.quantize:
+        return mom
+    s = 2.0 ** (cfg.k_mom - 1)
+    return round(mom * s) / s          # e.g. 0.75 = 3 * 2^-2 (3-bit)
+
+
+def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
+                    labels: Any, key: jax.Array, lr: float | jax.Array,
+                    mom: float = 0.75, dr_bits: int = 8):
+    """One optimizer step.  Returns (new_params, new_state).
+
+    `lr` must already be on the k_lr grid (see fixed_point_lr); `dr_bits` is
+    the (static) CQ range schedule value for this step.
+    """
+    momq = _mom_coeff(cfg, mom)
+    leaves, treedef = jax.tree.flatten(params)
+    glist = treedef.flatten_up_to(grads)
+    alist = treedef.flatten_up_to(state.acc)
+    llist = treedef.flatten_up_to(labels)
+
+    new_p, new_a = [], []
+    for i, (p, g, a, lab) in enumerate(zip(leaves, glist, alist, llist)):
+        if (not cfg.quantize or lab == "exempt"
+                or not (cfg.quant_g or cfg.quant_u)):
+            acc = mom * a + g
+            q = p - lr * acc
+        else:
+            if not cfg.quant_g:
+                gq = g
+            elif lab == "w":
+                gq = qf.cq(g, jax.random.fold_in(key, i), dr_bits, cfg.k_gc,
+                           stochastic=cfg.stochastic_g)
+            elif lab in ("gamma", "beta"):
+                k = cfg.k_ggamma if lab == "gamma" else cfg.k_gbeta
+                gq = qf.q_direct(g, k)
+            else:
+                raise ValueError(f"unknown label {lab!r}")
+            if not cfg.quant_u:       # Table II runs: FP32 update path
+                acc = mom * a + gq
+                q = p - lr * acc
+            else:
+                acc_full = momq * qf.q_direct(a, cfg.k_acc) + gq  # Eq. 20
+                acc = qf.q_direct(acc_full, cfg.k_acc)
+                dw = lr * acc_full                                # Eq. 23
+                q = qf.q_direct(p - dw, cfg.k_wu)                 # k_WU grid
+                lim = 1.0 - 2.0 ** (1 - cfg.k_wu)
+                q = jnp.clip(q, -lim, lim)
+        new_p.append(q)
+        new_a.append(acc)
+
+    return (jax.tree.unflatten(treedef, new_p),
+            MomentumState(acc=jax.tree.unflatten(treedef, new_a),
+                          step=state.step + 1))

@@ -1,0 +1,5 @@
+from .compress import compressed_psum_int, ring_reduce_scatter_int
+from .fault import StepWatchdog, TrainRunner, SimulatedFailure
+
+__all__ = ["compressed_psum_int", "ring_reduce_scatter_int", "StepWatchdog",
+           "TrainRunner", "SimulatedFailure"]

@@ -1,0 +1,89 @@
+"""Fault tolerance: watchdog, straggler policy, auto-resume train runner.
+
+Single-process realization of the multi-pod control plane (DESIGN.md §5):
+  * StepWatchdog — tracks per-step wall times; flags stragglers by a
+    deadline policy (median * factor).  On a real pod the flagged worker is
+    evicted and its data shard reassigned (the deterministic data pipeline
+    makes reassignment trivial — see data/synthetic.py).
+  * TrainRunner — wraps the jitted step in a crash/restart loop: on ANY
+    exception it restores the latest checkpoint and continues.  Combined
+    with deterministic data + stochastic-rounding keys derived from the step
+    counter, a restart reproduces the exact same trajectory (tested).
+  * SimulatedFailure — fault-injection hook for tests/chaos drills.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable
+
+log = logging.getLogger("repro.runtime")
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    def __init__(self, factor: float = 3.0, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.flags: list[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler by the deadline policy."""
+        self.times.append(dt)
+        if len(self.times) <= self.warmup:
+            return False
+        hist = sorted(self.times[:-1])
+        median = hist[len(hist) // 2]
+        if dt > self.factor * median:
+            self.flags.append(step)
+            log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                        step, dt, median)
+            return True
+        return False
+
+
+class TrainRunner:
+    """Checkpoint/restart training loop with fault injection hooks."""
+
+    def __init__(self, step_fn: Callable, ckpt, save_every: int = 50,
+                 max_restarts: int = 10, watchdog: StepWatchdog | None = None):
+        self.step_fn = step_fn              # (state, step) -> (state, metrics)
+        self.ckpt = ckpt                    # CheckpointManager over `state`
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StepWatchdog()
+        self.restarts = 0
+
+    def run(self, state, n_steps: int, start_step: int = 0,
+            fail_at: int | None = None):
+        """Runs to n_steps; restores+retries on failure.  Returns state."""
+        step = start_step
+        metrics = None
+        while step < n_steps:
+            try:
+                while step < n_steps:
+                    t0 = time.time()
+                    if fail_at is not None and step == fail_at:
+                        fail_at = None      # fail exactly once
+                        raise SimulatedFailure(f"injected at step {step}")
+                    state, metrics = self.step_fn(state, step)
+                    self.watchdog.observe(step, time.time() - t0)
+                    step += 1
+                    if step % self.save_every == 0 or step == n_steps:
+                        self.ckpt.save(step, state)
+            except Exception as e:  # noqa: BLE001 — any fault triggers restart
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restoring latest checkpoint",
+                            step, e)
+                try:
+                    state, step, _ = self.ckpt.restore(state)
+                except FileNotFoundError:
+                    step = start_step       # no checkpoint yet: cold restart
+        self.ckpt.wait()
+        return state, metrics

@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(requirement (c): per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.qmatmul import qmatmul
+from repro.kernels.quantize import cq_stochastic, quantize_fused
+from repro.kernels.selective_scan import selective_scan
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 128, 128),
+                                   (256, 512, 128), (100, 130, 70),
+                                   (1, 256, 64), (37, 64, 129)])
+@pytest.mark.parametrize("blocks", [(32, 32, 64), (128, 128, 128)])
+def test_qmatmul_sweep(m, k, n, blocks):
+    bm, bn, bk = blocks
+    a = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128,
+                           jnp.int8)
+    b = jax.random.randint(jax.random.PRNGKey(1), (k, n), -128, 128,
+                           jnp.int8)
+    got = qmatmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.qmatmul_ref(a, b)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qmatmul_int32_accumulation_no_overflow_in_int8_domain():
+    # worst case: K * 127 * 127 must accumulate exactly in int32
+    k = 1024
+    a = jnp.full((8, k), 127, jnp.int8)
+    b = jnp.full((k, 8), 127, jnp.int8)
+    got = qmatmul(a, b, interpret=True)
+    assert int(got[0, 0]) == k * 127 * 127
+
+
+@pytest.mark.parametrize("shape", [(16, 16), (100, 70), (256, 300), (1, 8)])
+@pytest.mark.parametrize("inv", [128.0, 4.0, 1 / 64.0])
+def test_quantize_sweep(shape, inv):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3
+    got = quantize_fused(x, jnp.float32(inv), bm=64, bn=64, interpret=True)
+    want = ref.quantize_ref(x, jnp.float32(inv), 127.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(32, 32), (100, 70)])
+@pytest.mark.parametrize("dr", [128.0, 64.0])
+def test_cq_stochastic_sweep(shape, dr):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    bits = jax.random.bits(jax.random.PRNGKey(1), shape, jnp.uint32)
+    got = cq_stochastic(x, bits, jnp.float32(37.0), dr=dr, bm=64, bn=64,
+                        interpret=True)
+    want = ref.cq_stochastic_ref(x, bits, jnp.float32(37.0), dr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,s,d,n", [(1, 16, 8, 4), (2, 48, 24, 4),
+                                     (2, 64, 32, 16), (1, 33, 10, 2)])
+def test_selective_scan_sweep(b, s, d, n):
+    k = jax.random.PRNGKey(0)
+    a = jnp.exp(-jax.random.uniform(k, (b, s, d, n)))
+    bb = jax.random.normal(jax.random.PRNGKey(1), (b, s, d, n)) * 0.1
+    c = jax.random.normal(jax.random.PRNGKey(2), (b, s, n))
+    got = selective_scan(a, bb, c, bd=8, bs=16, interpret=True)
+    want = ref.selective_scan_ref(a, bb, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_selective_scan_long_dependency():
+    """State must persist across seq blocks (VMEM scratch carry)."""
+    b, s, d, n = 1, 64, 4, 2
+    a = jnp.ones((b, s, d, n)) * 0.99
+    bb = jnp.zeros((b, s, d, n)).at[:, 0].set(1.0)   # impulse at t=0
+    c = jnp.ones((b, s, n))
+    y = selective_scan(a, bb, c, bd=4, bs=8, interpret=True)
+    # response at t is n * 0.99^t — nonzero far beyond the first block
+    want = n * 0.99 ** jnp.arange(s)
+    np.testing.assert_allclose(np.asarray(y[0, :, 0]), np.asarray(want),
+                               rtol=1e-4)
+
+
+def test_ops_dispatch_cpu_oracle():
+    from repro.kernels import ops
+    a = jax.random.randint(jax.random.PRNGKey(0), (16, 16), -128, 128,
+                           jnp.int8)
+    got = ops.qmatmul_op(a, a)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.qmatmul_ref(a, a)))
+    got2 = ops.qmatmul_op(a, a, force_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))

@@ -1,0 +1,105 @@
+"""Quantized Momentum optimizer (paper Eq. 19-24) invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import preset
+from repro.core import qfuncs as qf
+from repro.optim import (MomentumState, fixed_point_lr, init_momentum,
+                         momentum_update)
+
+
+def _setup():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)) * 0.1,
+              "g": jnp.ones((8,)), "b": jnp.zeros((8,)),
+              "e": jax.random.normal(jax.random.PRNGKey(1), (4,))}
+    labels = {"w": "w", "g": "gamma", "b": "beta", "e": "exempt"}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(2), p.shape) * 1e-3,
+        params)
+    return params, labels, grads
+
+
+def test_bitwidth_closure():
+    cfg = preset("full8")
+    cfg.validate()  # Eq. 22 and Eq. 24 asserted inside
+    assert cfg.k_wu == cfg.k_gc + cfg.k_lr - 1 == 24
+
+
+def test_paper_lr_grid():
+    cfg = preset("full8")
+    assert fixed_point_lr(0.05, cfg) == 0.05078125        # 26 * 2^-9 (§IV-B)
+    assert fixed_point_lr(0.05, preset("fp32")) == 0.05
+
+
+def test_update_on_kwu_grid():
+    cfg = preset("full8", "sim")
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    p2, st2 = momentum_update(cfg, params, grads, st, labels,
+                              jax.random.PRNGKey(3), fixed_point_lr(0.05, cfg))
+    n = p2["w"] * 2.0 ** 23
+    assert bool(jnp.allclose(n, jnp.round(n)))
+    lim = 1.0 - 2.0 ** -23
+    assert bool(jnp.all(jnp.abs(p2["w"]) <= lim))
+    assert int(st2.step) == 1
+
+
+def test_momentum_recurrence_matches_eq20():
+    cfg = preset("full8", "sim").replace(stochastic_g=False)
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    lr = fixed_point_lr(0.05, cfg)
+    p2, st2 = momentum_update(cfg, params, grads, st, labels,
+                              jax.random.PRNGKey(3), lr, mom=0.75, dr_bits=8)
+    gq = qf.cq(grads["w"], None, 8, 15, stochastic=False)
+    acc_full = 0.75 * jnp.zeros_like(gq) + gq
+    want = jnp.clip(qf.q_direct(params["w"] - lr * acc_full, 24),
+                    -(1 - 2.0 ** -23), 1 - 2.0 ** -23)
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(want),
+                               atol=1e-9)
+    np.testing.assert_allclose(np.asarray(st2.acc["w"]),
+                               np.asarray(qf.q_direct(acc_full, 13)),
+                               atol=1e-9)
+
+
+def test_exempt_leaf_is_vanilla_momentum():
+    cfg = preset("full8", "sim")
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    p2, st2 = momentum_update(cfg, params, grads, st, labels,
+                              jax.random.PRNGKey(3), 0.1, mom=0.9)
+    want = params["e"] - 0.1 * (0.9 * 0 + grads["e"])
+    np.testing.assert_allclose(np.asarray(p2["e"]), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_fp32_mode_is_vanilla_everywhere():
+    cfg = preset("fp32")
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    p2, _ = momentum_update(cfg, params, grads, st, labels,
+                            jax.random.PRNGKey(3), 0.05)
+    want = params["w"] - 0.05 * grads["w"]
+    np.testing.assert_allclose(np.asarray(p2["w"]), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_deterministic_given_key():
+    cfg = preset("full8", "sim")
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    a = momentum_update(cfg, params, grads, st, labels,
+                        jax.random.PRNGKey(7), 0.05)[0]
+    b = momentum_update(cfg, params, grads, st, labels,
+                        jax.random.PRNGKey(7), 0.05)[0]
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_dr_schedule():
+    from repro.optim import dr_bits_schedule
+    assert dr_bits_schedule(0, (100, 200)) == 8
+    assert dr_bits_schedule(150, (100, 200)) == 7
+    assert dr_bits_schedule(250, (100, 200)) == 6

@@ -1,0 +1,168 @@
+"""Property tests for the WAGEUBN quantization functions (paper §III-C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qfuncs as qf
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+def arrays(min_val=-4.0, max_val=4.0):
+    return st.lists(st.floats(min_val, max_val, allow_nan=False,
+                              width=32), min_size=1, max_size=64).map(
+        lambda v: jnp.asarray(v, jnp.float32))
+
+
+# ------------------------- direct quantization -------------------------
+
+
+@given(arrays(), st.integers(2, 16))
+def test_q_direct_on_grid(x, k):
+    y = qf.q_direct(x, k)
+    n = y * 2.0 ** (k - 1)
+    assert jnp.allclose(n, jnp.round(n))          # grid membership
+    assert jnp.max(jnp.abs(y - x)) <= 2.0 ** -k + 1e-6  # nearest rounding
+
+
+@given(arrays(), st.integers(2, 16))
+def test_q_direct_idempotent(x, k):
+    y = qf.q_direct(x, k)
+    assert jnp.array_equal(qf.q_direct(y, k), y)
+
+
+@given(arrays(), st.integers(2, 12))
+def test_q_clip_range(x, k):
+    y = qf.q_clip(x, k)
+    lim = 1.0 - qf.d(k)
+    assert jnp.all(jnp.abs(y) <= lim + 1e-9)
+
+
+# ------------------------- shift quantization -------------------------
+
+
+@given(arrays(-0.0009765625, 0.0009765625), st.integers(4, 12))
+def test_sq_preserves_magnitude_order(x, k):
+    """The paper's motivation: tiny errors must not vanish (§IV-A)."""
+    y = qf.sq(x, k)
+    m = jnp.max(jnp.abs(x))
+    if float(m) > 1e-6:
+        assert float(jnp.max(jnp.abs(y))) >= float(m) / 4.0
+
+
+@given(arrays(), st.integers(4, 12))
+def test_sq_grid(x, k):
+    y = qf.sq(x, k)
+    r = qf.pow2_round(qf.amax(x))
+    n = y / r * 2.0 ** (k - 1)
+    assert jnp.allclose(n, jnp.round(n), atol=1e-4)
+    assert jnp.all(jnp.abs(y) <= float(r) * (1 - qf.d(k)) + 1e-9)
+
+
+def test_pow2_round_zeros():
+    assert float(qf.pow2_round(jnp.float32(0.0))) == 1.0
+    assert float(qf.pow2_round(jnp.float32(3.0))) in (2.0, 4.0)
+    assert float(qf.pow2_round(jnp.float32(0.26))) == 0.25
+
+
+# ------------------------- flag QE2 (Eq. 17) -------------------------
+
+
+@given(arrays(-2.0, 2.0))
+def test_flag_qe2_two_regimes(x):
+    y = qf.flag_qe2(x, 8)
+    r = qf.pow2_round(qf.amax(x))
+    sc = float(r) / 128.0
+    n_big = y / sc
+    n_small = y / (sc / 128.0)
+    on_big = jnp.abs(n_big - jnp.round(n_big)) < 1e-3
+    on_small = jnp.abs(n_small - jnp.round(n_small)) < 1e-3
+    assert bool(jnp.all(on_big | on_small))
+
+
+def test_flag_qe2_covers_15bit_range():
+    """9-bit flag format covers ~ the range of direct 15-bit (paper Fig.4)."""
+    x = jnp.asarray([1.0, 2.0 ** -14, 2.0 ** -7, 0.9], jnp.float32)
+    y = qf.flag_qe2(x, 8)
+    # smallest magnitude representable: Sc/128 = R/128/128 ~ 2^-14 * R
+    assert float(jnp.abs(y[1])) > 0.0          # not flushed to zero
+    rel = jnp.abs(y - x) / jnp.maximum(jnp.abs(x), 1e-9)
+    assert float(rel.max()) < 0.5
+
+
+def test_flag_vs_sq8_small_value_coverage():
+    """Fig. 10: 8-bit SQ flushes small errors; flag keeps them."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 3)
+    sq8 = qf.sq(x, 8)
+    fl8 = qf.flag_qe2(x, 8)
+    ratio_sq = float(jnp.mean(sq8 != 0))
+    ratio_fl = float(jnp.mean(fl8 != 0))
+    assert ratio_fl > ratio_sq                 # flag covers more data
+
+
+# ------------------------- constant quantization -------------------------
+
+
+@given(arrays(), st.integers(3, 8))
+def test_cq_range_and_grid(x, dr_bits):
+    y = qf.cq(x, jax.random.PRNGKey(0), dr_bits, 15)
+    dr = 2.0 ** (dr_bits - 1)
+    n = y * 2.0 ** 14
+    assert jnp.allclose(n, jnp.round(n), atol=1e-3)
+    assert jnp.all(jnp.abs(n) <= dr - 1 + 1e-6)
+
+
+def test_cq_stochastic_unbiased():
+    # pin R(x)=1 with a sentinel so dr*n stays inside the clip range
+    x = jnp.full((20001,), 0.3 * 2.0 ** -8).at[0].set(1.0)
+    ys = qf.cq(x, jax.random.PRNGKey(3), 8, 15)[1:]
+    want = float(x[1] * 128 / 2 ** 14)        # E[y] = x/R * dr / 2^(kgc-1)
+    got = float(jnp.mean(ys))
+    assert abs(got - want) < 0.1 * abs(want)
+
+
+def test_stochastic_round_exact_on_integers():
+    x = jnp.asarray([1.0, -3.0, 7.0])
+    y = qf.stochastic_round(x, jax.random.PRNGKey(0))
+    assert jnp.array_equal(x, y)
+
+
+# ------------------------- STE -------------------------
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(qf.ste(lambda t: qf.q_direct(t, 4), x)))(
+        jnp.linspace(-1, 1, 16))
+    assert jnp.allclose(g, 1.0)
+
+
+# ------------------------- int decomposition -------------------------
+
+
+@given(arrays(-0.998046875, 0.998046875), st.integers(4, 8))
+def test_dec_int8_lossless_on_grid(x, k):
+    """Exact up to one step of the (possibly finer) re-derived grid: when
+    the quantized amax falls below half the original scale, dec_int8 picks
+    a finer step whose top code saturates by <= 1 ulp."""
+    xq = qf.q_scaled(x, k)
+    data, step = qf.dec_int8(xq, k)
+    assert data.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(data, np.float32) * float(step),
+                               np.asarray(xq), atol=float(step) * 1.01)
+
+
+@given(arrays())
+def test_dec_error_flag_planes_disjoint_and_exact(x):
+    planes = qf.dec_error(x, "flag8", 8)
+    assert len(planes) == 2
+    (hi, shi), (lo, slo) = planes
+    assert bool(jnp.all((hi == 0) | (lo == 0)))      # disjoint support
+    recon = hi.astype(jnp.float32) * shi + lo.astype(jnp.float32) * slo
+    want = qf.flag_qe2(x, 8)
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)

@@ -1,0 +1,63 @@
+"""Quantized norm layers vs the paper's Eq. 12 recipe."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import preset, qbatchnorm, qlayernorm, qrmsnorm
+from repro.core import qfuncs as qf
+from repro.core.qnorm import EPS_Q
+
+
+def test_qbatchnorm_matches_eq12():
+    cfg = preset("full8", "sim")
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 4, 4, 8)) * 2 + 0.5
+    gamma = jnp.ones((8,)) * 1.25
+    beta = jnp.ones((8,)) * 0.125
+    y = qbatchnorm(cfg, x, gamma, beta)
+    mu = jnp.mean(x, (0, 1, 2))
+    sig = jnp.sqrt(jnp.mean(x ** 2, (0, 1, 2)) - mu ** 2)
+    xhat = qf.q_direct((x - qf.q_direct(mu, 16)) /
+                       (qf.q_direct(sig, 16) + EPS_Q), 16)
+    want = qf.q_direct(gamma, 8) * xhat + qf.q_direct(beta, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+
+
+def test_qbatchnorm_fp32_is_plain_bn():
+    cfg = preset("fp32")
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 8)) * 3
+    y = qbatchnorm(cfg, x, jnp.ones((8,)), jnp.zeros((8,)))
+    assert abs(float(jnp.mean(y))) < 1e-4
+    assert abs(float(jnp.std(y)) - 1.0) < 0.05
+
+
+def test_qrmsnorm_quantized_output_grid():
+    cfg = preset("full8", "sim")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    y = qrmsnorm(cfg, x, jnp.ones((64,)))
+    sig = qf.q_direct(jnp.sqrt(jnp.mean(x ** 2, -1, keepdims=True)), 16)
+    xhat = y  # gamma = 1 exactly on the 8-bit grid
+    n = xhat * 2.0 ** 15 * 0 + (x / (sig + EPS_Q))
+    # output must equal Q_BN(x / sigma_q) * Q(gamma)
+    want = qf.q_direct(x / (sig + EPS_Q), 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+
+
+def test_norm_grads_flow_and_finite():
+    for fn, args in [
+        (qrmsnorm, (jnp.ones((64,)),)),
+        (qlayernorm, (jnp.ones((64,)), jnp.zeros((64,)))),
+    ]:
+        cfg = preset("full8", "sim")
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        grads = jax.grad(
+            lambda x, *a: jnp.sum(fn(cfg, x, *a) ** 2), argnums=(0,))(
+            x, *args)
+        assert not bool(jnp.isnan(grads[0]).any())
+        assert float(jnp.abs(grads[0]).max()) > 0
+
+
+def test_norm_simple_bwd_option():
+    cfg = preset("full8", "sim").replace(norm_full_bwd=False)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    g = jax.grad(lambda t: jnp.sum(qrmsnorm(cfg, t, jnp.ones((64,)))))(x)
+    assert not bool(jnp.isnan(g).any())
