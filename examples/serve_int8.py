@@ -23,10 +23,13 @@ def main():
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=24)
     p.add_argument("--gen", type=int, default=16)
+    p.add_argument("--mode", default="native", choices=["sim", "native"],
+                   help="native: the int8 KV cache is consumed as QTensors —"
+                        " decode matmuls run on the cache payloads directly")
     args = p.parse_args()
 
     acfg = get(args.arch).reduced()
-    qcfg = preset("full8", "sim")
+    qcfg = preset("full8", args.mode)
     model = build_model(acfg, qcfg)
     params = model.init(jax.random.PRNGKey(0))
 

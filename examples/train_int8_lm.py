@@ -39,6 +39,9 @@ def main():
     p.add_argument("--vocab", type=int, default=512)
     p.add_argument("--preset", default="full8",
                    choices=["full8", "e2_16", "fp32"])
+    p.add_argument("--mode", default="sim", choices=["sim", "native"],
+                   help="native: activations/weights flow as int8 QTensors "
+                        "into the integer matmul kernels")
     p.add_argument("--ckpt-dir", default="/tmp/int8_lm_ckpt")
     p.add_argument("--fail-at", type=int, default=None,
                    help="inject a crash at this step (fault-tolerance demo)")
@@ -49,7 +52,7 @@ def main():
                       n_kv=max((args.d_model // 64) // 2, 1),
                       d_ff=args.d_ff, vocab=args.vocab, head_dim=64,
                       q_chunk=128, kv_chunk=128)
-    qcfg = preset(args.preset, "sim" if args.preset != "fp32" else None)
+    qcfg = preset(args.preset, args.mode if args.preset != "fp32" else None)
     model = build_model(arch, qcfg)
     params = model.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))

@@ -20,10 +20,12 @@ def main():
     p.add_argument("--steps", type=int, default=120)
     args = p.parse_args()
     print(f"{'config':15s} {'holdout acc':12s} {'us/step':10s}")
-    for name in ("fp32", "e2_16", "full8"):
-        qcfg = preset(name, "sim" if name != "fp32" else None)
+    for name, mode in (("fp32", None), ("e2_16", "sim"), ("full8", "sim"),
+                       ("full8", "native")):
+        qcfg = preset(name, mode)
         r = train_resnet(qcfg, args.steps)
-        print(f"{name:15s} {r['acc']:<12.4f} "
+        label = name if mode in (None, "sim") else f"{name}/{mode}"
+        print(f"{label:15s} {r['acc']:<12.4f} "
               f"{r['wall_s'] / args.steps * 1e6:<10.0f}")
 
 

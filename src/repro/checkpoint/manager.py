@@ -21,14 +21,24 @@ import jax
 import numpy as np
 
 
+def _path_key(path) -> str:
+    """Stable string key for a pytree path entry: dict keys (DictKey.key),
+    sequence indices (SequenceKey.idx) and dataclass-pytree fields like
+    QTensor's (GetAttrKey.name) all round-trip through checkpoints."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
 def _flatten_with_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
-    for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        out[key] = np.asarray(leaf)
-    return out
+    return {_path_key(path): np.asarray(leaf) for path, leaf in flat}
 
 
 class CheckpointManager:
@@ -119,8 +129,7 @@ class CheckpointManager:
                  if pspec_tree is not None else [None] * len(flat))
         from jax.sharding import NamedSharding
         for (path, ref), spec in zip(flat, specs):
-            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                           for p in path)
+            key = _path_key(path)
             arr = data[key]
             assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
             if mesh is not None and spec is not None:

@@ -1,0 +1,19 @@
+"""Version-compat shims for the installed jax."""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as shard_map
+except ImportError:  # older jax
+    from jax.experimental.shard_map import shard_map as shard_map
+
+# jax renamed shard_map's replication-check kwarg (check_rep -> check_vma);
+# SHARD_MAP_KW holds whichever spelling this jax version accepts.
+_params = inspect.signature(shard_map).parameters
+if "check_vma" in _params:
+    SHARD_MAP_KW = {"check_vma": False}
+elif "check_rep" in _params:
+    SHARD_MAP_KW = {"check_rep": False}
+else:  # pragma: no cover
+    SHARD_MAP_KW = {}

@@ -1,11 +1,17 @@
-"""WAGEUBN core: quantization functions, quantized ops, quantized norms."""
+"""WAGEUBN core: QTensor + quantizer registry, quantized ops, quantized norms."""
 from .qconfig import FULL8, E2_16, FP32, PRESETS, QConfig, preset
+from .qtensor import (ALIASES, QTensor, QuantSpec, Quantizer, get_quantizer,
+                      qt_carrier, quantize_ste, register_quantizer,
+                      registered_quantizers, resolve_quantizer)
 from . import qfuncs
 from .qdense import qact, qconv, qdense, qeinsum, qprobs, qweight, qbn_param
 from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
 
 __all__ = [
     "FULL8", "E2_16", "FP32", "PRESETS", "QConfig", "preset", "qfuncs",
+    "ALIASES", "QTensor", "QuantSpec", "Quantizer", "get_quantizer",
+    "qt_carrier", "quantize_ste", "register_quantizer",
+    "registered_quantizers", "resolve_quantizer",
     "qact", "qconv", "qdense", "qeinsum", "qprobs", "qweight", "qbn_param",
     "qbatchnorm", "qlayernorm", "qrmsnorm",
 ]

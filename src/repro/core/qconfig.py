@@ -8,6 +8,18 @@ Bit-width notation follows the paper (Yang et al. 2019, §III-B/§IV-A):
   k_Ggamma, k_Gbeta           — gamma/beta gradient widths (Eq. 18)
   k_Mom, k_Acc, k_lr, k_WU    — Momentum optimizer + update widths (Eq. 19-24)
 
+Per-path quantizers are structured `QuantSpec`s resolved through the
+quantizer registry (DESIGN.md §2): `w`/`a`/`e1`/`e2`/`e_attn`/`g`.  The old
+string fields `e2_kind`/`e_attn_kind` are kept as DEPRECATED aliases — when
+passed they are resolved via the registry alias table and the matching spec
+is rebuilt; reading them returns the canonical legacy name of the spec.
+
+Width semantics (INTENTIONAL change vs the legacy string dispatcher): an
+explicit width field now re-widths the configured spec — QConfig(k_e2=16)
+means flag@16, where the legacy dispatcher silently ignored k_e2 for
+width-pinned kinds like "flag8".  Pass a width-suffixed alias (e2_kind=
+"flag8") to pin the width regardless of k_e2.
+
 Paper presets (§IV-A): full 8-bit ("FULL8") and the 16-bit E2 variant
 ("E2_16").  "FP32" turns every quantizer into the identity — the vanilla
 baseline the paper compares against.
@@ -15,13 +27,19 @@ baseline the paper compares against.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+
+from .qtensor import QuantSpec, legacy_kind, spec_from_alias
+
+# legacy single-width fields <-> structured spec fields
+_WIDTH_TO_SPEC = {"k_w": "w", "k_a": "a", "k_e1": "e1", "k_e2": "e2",
+                  "k_gc": "g"}
 
 
 @dataclass(frozen=True)
 class QConfig:
     # Numeric mode: "fp32" (vanilla), "sim" (grid values carried in fp32),
-    # "native" (int8/int16 payloads + pow2 scales, integer dot_generals).
+    # "native" (QTensor int8/int16 payloads + pow2 scales, integer dots).
     mode: str = "sim"
 
     # --- forward-path widths ---
@@ -36,8 +54,19 @@ class QConfig:
     # --- error-path widths (backward) ---
     k_e1: int = 8            # Q_E1 = shift-quantization at layer boundaries
     k_e2: int = 8            # Q_E2 before weight matmuls (flag or 16-bit)
-    e2_kind: str = "flag8"   # "flag8" (Eq. 17) | "sq16" (Eq. 16) | "sq8"
-    e_attn_kind: str = "sq8" # error quant for activation-activation matmuls
+
+    # --- structured per-path quantizer specs (registry-resolved) ---
+    w: QuantSpec = field(default=QuantSpec("clip", 8))       # Q_W  (Eq. 10)
+    a: QuantSpec = field(default=QuantSpec("scaled", 8))     # Q_A  (Eq. 14)
+    e1: QuantSpec = field(default=QuantSpec("sq", 8))        # Q_E1 (Eq. 15)
+    e2: QuantSpec = field(default=QuantSpec("flag", 8))      # Q_E2 (Eq. 17)
+    e_attn: QuantSpec = field(default=QuantSpec("sq", 8))    # act-act matmuls
+    g: QuantSpec = field(default=QuantSpec("cq", 15))        # CQ   (Eq. 7)
+
+    # DEPRECATED string aliases (resolve through the registry alias table);
+    # after __post_init__ they always hold the canonical legacy names.
+    e2_kind: str | None = None
+    e_attn_kind: str | None = None
 
     # --- gradient / optimizer widths ---
     k_gw: int = 8            # dr bits of CQ (shrinks during training)
@@ -55,8 +84,10 @@ class QConfig:
     norm_full_bwd: bool = True
 
     # ---- beyond-paper performance knobs (EXPERIMENTS.md §Perf) ----
-    # fixed 2^(1-k_W) scale for weight operands in qeinsum (skips the amax
-    # pass; valid because Q_W saturates to (-1,1)) -> int8 FSDP gathers
+    # DEPRECATED: native weight payloads now always use the fixed 2^(1-k_W)
+    # scale of the "clip" quantizer when they arrive as QTensors (lossless
+    # for Q_W-saturated weights).  This flag only still affects raw fp32
+    # operands marked b_weight that reach qeinsum un-quantized.
     fixed_w_scale: bool = False
     # carrier dtype at TP matmul boundaries ("f32" | "bf16"): bf16 holds the
     # 8-bit activation grid exactly and halves all-reduce bytes
@@ -73,6 +104,41 @@ class QConfig:
     quant_e2: bool = True
     quant_u: bool = True
 
+    def __post_init__(self):
+        set_ = lambda n, v: object.__setattr__(self, n, v)
+        # Deprecated string aliases win ONLY when they carry new information
+        # (differ from the spec's own canonical name).  A canonical string
+        # merely carried through dataclasses.replace must NOT rebuild the
+        # spec — that would erase non-alias widths and custom params.
+        e2_str = self.e2_kind
+        if e2_str is not None and e2_str != legacy_kind(self.e2):
+            set_("e2", spec_from_alias(e2_str, self.k_e2))
+        if (self.e_attn_kind is not None
+                and self.e_attn_kind != legacy_kind(self.e_attn)):
+            set_("e_attn", spec_from_alias(self.e_attn_kind, self.e_attn.k))
+        # Reconcile legacy width fields with specs: an explicitly configured
+        # spec wins (its k is authoritative); an untouched default spec
+        # inherits the width field (legacy constructors like QConfig(k_a=4)).
+        # Whenever a string kind was present at all ("flag8" explicit or
+        # carried), the spec it names is authoritative — width-pinned aliases
+        # must never be re-widthed by a stale k_e2 (legacy quant_error
+        # ignored k_e2 for them too); replace() passes e2_kind=None when a
+        # bare k_e2 change should re-width the current spec.
+        for kf, sf in _WIDTH_TO_SPEC.items():
+            if sf == "e2" and e2_str is not None:
+                set_("k_e2", self.e2.k)
+                continue
+            spec, kval = getattr(self, sf), getattr(self, kf)
+            if spec.k != kval:
+                if spec == _DEFAULT_SPECS[sf]:
+                    set_(sf, spec.replace(k=kval))
+                else:
+                    set_(kf, spec.k)
+        # canonicalize the deprecated strings LAST, from the final specs —
+        # a stale alias must never describe a pre-reconciliation spec
+        set_("e2_kind", legacy_kind(self.e2))
+        set_("e_attn_kind", legacy_kind(self.e_attn))
+
     @property
     def quantize(self) -> bool:
         return self.mode != "fp32"
@@ -82,6 +148,20 @@ class QConfig:
         return self.mode == "native"
 
     def replace(self, **kw) -> "QConfig":
+        # replacing a spec clears its deprecated string alias (which would
+        # otherwise win in __post_init__); replacing the string clears the
+        # spec-derived canonical form implicitly.
+        if "e2" in kw and "e2_kind" not in kw:
+            kw["e2_kind"] = None
+        if "e_attn" in kw and "e_attn_kind" not in kw:
+            kw["e_attn_kind"] = None
+        # replacing a legacy width field re-widths the current spec (the
+        # spec is otherwise authoritative for k in __post_init__)
+        for kf, sf in _WIDTH_TO_SPEC.items():
+            if kf in kw and sf not in kw:
+                kw[sf] = getattr(self, sf).replace(k=kw[kf])
+                if sf == "e2" and "e2_kind" not in kw:
+                    kw["e2_kind"] = None   # the re-widthed spec must win
         return dataclasses.replace(self, **kw)
 
     def validate(self) -> None:
@@ -93,9 +173,16 @@ class QConfig:
         assert self.k_wu == self.k_gc + self.k_lr - 1, (
             "bit-width closure Eq.(24) violated"
         )
-        assert self.e2_kind in ("flag8", "sq16", "sq8")
+        # every per-path spec must resolve through the registry
+        for spec in (self.w, self.a, self.e1, self.e2, self.e_attn, self.g):
+            spec.make()
         assert self.mode in ("fp32", "sim", "native")
 
+
+# single source of truth for "untouched default spec" detection: the
+# dataclass field defaults themselves
+_DEFAULT_SPECS = {sf: QConfig.__dataclass_fields__[sf].default
+                  for sf in _WIDTH_TO_SPEC.values()}
 
 FULL8 = QConfig()                                   # paper full 8-bit version
 E2_16 = QConfig(e2_kind="sq16", k_e2=16)            # paper 16-bit E2 version

@@ -1,32 +1,46 @@
-"""Quantized compute ops with WAGEUBN backward semantics.
+"""Quantized compute ops with WAGEUBN backward semantics, QTensor-native.
 
 The paper's dataflow (Fig. 5 / Algorithms 1-2) is realized with three
 custom-vjp ops:
 
-  qeinsum  — every matmul.  Forward: int8 x int8 -> int32 (native) or exact
-             grid fp32 (sim).  Backward: the incoming cotangent is quantized
-             with Q_E2 (paper e3), then BOTH the input-error dot (e4 = W^T e3)
+  qeinsum  — every matmul.  Operands may be fp32 grid carriers OR QTensors
+             (DESIGN.md §2): a QTensor operand is consumed as-is — its int
+             payload feeds the integer dot directly, with NO re-decomposition
+             (no amax pass) in either the forward or the backward.  Raw fp32
+             operands are decomposed exactly once at entry.  Backward: the
+             incoming cotangent is quantized with Q_E2 (paper e3) through the
+             quantizer registry, then BOTH the input-error dot (e4 = W^T e3)
              and the weight-gradient dot (g_W = e3 x0^T) run on integer
-             operands — exactly Algorithm 2.
-  qact     — activation + Q_A.  Backward applies Q_E1 (shift quantization)
-             to the cotangent at the layer boundary (paper e0), then the
-             activation derivative (paper e1) — exactly Algorithm 2.
+             operands — exactly Algorithm 2.  2-D int8 dots route through
+             the Pallas qmatmul kernel (kernels/ops.qmatmul_op).
+  qact     — activation + Q_A.  In native mode the output IS a QTensor
+             (payload decomposed once, differentiable via its carrier).
+             Backward applies Q_E1 (shift quantization) to the cotangent at
+             the layer boundary (paper e0), then the activation derivative
+             (paper e1) — exactly Algorithm 2.
   qconv    — ResNet convolutions, same error semantics via jax.vjp on the
              saturating conv evaluated at quantized operands.
 
 Weight quantization Q_W (Eq. 10) is applied by callers through `qweight`
-(STE, so the gradient reaches the int32 master copy unchanged, Eq. 1).
+(STE, so the gradient reaches the int32 master copy unchanged, Eq. 1);
+in native mode it returns a QTensor with the FIXED 2^(1-k_W) scale — no
+amax pass ever happens on weights.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels.ops import qmatmul_op
+
 from . import qfuncs as qf
 from .qconfig import QConfig
+from .qtensor import (QTensor, get_quantizer, qt_carrier,
+                      qtensor_cotangent, quantize_ste, resolve_quantizer)
 
 Array = jax.Array
 
@@ -36,25 +50,32 @@ Array = jax.Array
 # --------------------------------------------------------------------------
 
 
-def qweight(cfg: QConfig, w: Array) -> Array:
-    """Q_W (Eq. 10): k_W-bit direct quantization with saturation, STE."""
+def qweight(cfg: QConfig, w: Array):
+    """Q_W (Eq. 10) through cfg.w's registered quantizer, STE.
+
+    native mode -> QTensor (fixed-scale int8 payload, decomposed once);
+    sim mode    -> fp32 grid carrier (legacy semantics, bit-identical).
+    """
     if not cfg.quantize or not cfg.quant_w:
         return w
-    return qf.ste(lambda t: qf.q_clip(t, cfg.k_w), w)
+    quantizer = cfg.w.make()
+    if cfg.native:
+        return quantize_ste(quantizer, w)
+    return qf.ste(quantizer, w)
 
 
 def qbn_param(cfg: QConfig, p: Array, k: int) -> Array:
     """Q for norm operands (gamma/beta/mu/sigma, Eq. 13), STE."""
     if not cfg.quantize:
         return p
-    return qf.ste(lambda t: qf.q_direct(t, k), p)
+    return qf.ste(get_quantizer("direct", k), p)
 
 
 def qprobs(cfg: QConfig, p: Array) -> Array:
     """Attention probabilities onto the k_A grid (in [0,1] so Q is exact-range)."""
     if not cfg.quantize:
         return p
-    return qf.ste(lambda t: qf.q_direct(t, cfg.k_a), p)
+    return qf.ste(get_quantizer("direct", cfg.k_a), p)
 
 
 _ACT = {
@@ -68,27 +89,37 @@ _ACT = {
 }
 
 
+def qact(cfg: QConfig, act: str, x):
+    """activation + Q_A.  Native mode returns a QTensor (the int8 payload is
+    what downstream matmuls consume); sim/fp32 return fp32 carriers."""
+    return _qact(cfg, act, qt_carrier(x))
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def qact(cfg: QConfig, act: str, x: Array) -> Array:
+def _qact(cfg: QConfig, act: str, x: Array):
     fn, _ = _ACT[act]
     y = fn(x)
     if cfg.quantize and cfg.quant_a:
-        y = qf.q_scaled(y, cfg.k_a)
+        quantizer = cfg.a.make()
+        if cfg.native:
+            return quantizer.quantize(y).with_carrier()
+        return quantizer(y)
     return y
 
 
 def _qact_fwd(cfg, act, x):
-    return qact(cfg, act, x), x
+    return _qact(cfg, act, x), x
 
 
-def _qact_bwd(cfg, act, x, g):
+def _qact_bwd(cfg, act, x, ct):
     _, dfn = _ACT[act]
+    g = ct.carrier if isinstance(ct, QTensor) else ct
     if cfg.quantize and cfg.quant_e1:
-        g = qf.sq(g, cfg.k_e1)          # Q_E1: e0 = SQ(e4^{l+1})   (Eq. 15)
-    return (g * dfn(x),)                # e1 = e0 * dACT            (Alg. 2)
+        g = cfg.e1.make()(g)          # Q_E1: e0 = SQ(e4^{l+1})   (Eq. 15)
+    return (g * dfn(x),)              # e1 = e0 * dACT            (Alg. 2)
 
 
-qact.defvjp(_qact_fwd, _qact_bwd)
+_qact.defvjp(_qact_fwd, _qact_bwd)
 
 
 # --------------------------------------------------------------------------
@@ -106,14 +137,52 @@ def _bwd_specs(spec: str):
     return f"{out},{b_s}->{a_s}", f"{a_s},{out}->{b_s}"
 
 
-def _int_einsum(spec, a, b):
-    return jnp.einsum(spec, a, b, preferred_element_type=jnp.int32)
+def _int_contract(spec, a8, b8):
+    """Integer contraction; canonical 2-D forms route through the Pallas
+    qmatmul kernel (MXU int8 path), everything else through XLA einsum."""
+    if a8.dtype == jnp.int8 and b8.dtype == jnp.int8:
+        if spec == "mk,kn->mn":
+            return qmatmul_op(a8, b8)
+        if spec == "mn,kn->mk":          # da = g @ b^T
+            return qmatmul_op(a8, b8.T)
+        if spec == "mk,mn->kn":          # db = a^T @ g
+            return qmatmul_op(a8.T, b8)
+    return jnp.einsum(spec, a8, b8, preferred_element_type=jnp.int32)
 
 
-def _dec_b(cfg, b, b_weight):
-    if b_weight and cfg.fixed_w_scale:
-        return qf.dec_int8_fixed(b, cfg.k_w)
-    return qf.dec_int8(b, cfg.k_w)
+def _qt_contract(spec, qa: QTensor, qb: QTensor):
+    """Sum of integer dots over the operands' plane products, rescaled."""
+    y = None
+    for a_data, a_scale in qa.planes():
+        for b_data, b_scale in qb.planes():
+            t = _int_contract(spec, a_data, b_data).astype(jnp.float32) \
+                * (a_scale * b_scale)
+            y = t if y is None else y + t
+    return y
+
+
+def _fwd_quantize(cfg: QConfig, x, weight_side: bool) -> QTensor:
+    """Native operand entry: QTensors pass through untouched (ZERO redundant
+    decomposition); raw carriers are decomposed exactly once."""
+    if isinstance(x, QTensor):
+        return x.drop_carrier()
+    if weight_side and cfg.fixed_w_scale:
+        return get_quantizer("clip", cfg.k_w).quantize(x)
+    return get_quantizer("grid", cfg.k_w if weight_side else cfg.k_a).quantize(x)
+
+
+def _error_quantizer(cfg: QConfig, e_kind):
+    """Registry lookup for Q_E2: QuantSpec | legacy string | "default"."""
+    if cfg.quant_e2:
+        quantizer = resolve_quantizer(
+            cfg.e2 if e_kind == "default" else e_kind, cfg.k_e2)
+        if quantizer.name != "none":
+            return quantizer
+    # identity ("none" via switch, argument, or spec): no quantization; the
+    # native payload falls back to the lossless-on-grid 16-bit decomposition
+    # (legacy dec_int16) — NEVER k_e2-wide, which would silently quantize a
+    # path explicitly configured as unquantized
+    return get_quantizer("none")
 
 
 def _carrier(cfg, y):
@@ -122,73 +191,105 @@ def _carrier(cfg, y):
     return y
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def qeinsum(cfg: QConfig, spec: str, e_kind: str, b_weight: bool,
-            a: Array, b: Array) -> Array:
+def _tag(x) -> str:
+    if isinstance(x, QTensor):
+        return "qt" if x.carrier is not None else "qt_frozen"
+    return "arr"
+
+
+def _save(x):
+    return x.drop_carrier() if isinstance(x, QTensor) else x
+
+
+def _wrap_ct(tag: str, saved, d):
+    """Cotangent matching the original operand's pytree structure: plain
+    array for arrays, QTensor-shaped (gradient on the carrier leaf, float0
+    payloads) for QTensors; frozen QTensors (no carrier) get no gradient."""
+    if tag == "arr":
+        return d
+    assert isinstance(saved, QTensor), tag   # _save keeps QTensors QTensors
+    ct = qtensor_cotangent(saved, None)
+    if tag == "qt":
+        ct = dataclasses.replace(ct, carrier=d)
+    return ct
+
+
+def qeinsum(cfg: QConfig, spec: str, e_kind, b_weight: bool, a, b) -> Array:
     """y = einsum(spec, a, b) with WAGEUBN forward/backward quantization.
 
-    `a` and `b` must already be on their forward grids (via qact/qweight);
-    `e_kind` selects Q_E2 ("flag8" | "sq16" | "sq8" | "none"); `b_weight`
-    marks b as a saturated Q_W weight (enables fixed-scale int8, §Perf).
+    `a`/`b`: fp32 grid carriers (via qact/qweight in sim mode) or QTensors
+    (native mode) — QTensor payloads feed the integer dots directly.
+    `e_kind` selects Q_E2: a QuantSpec, a registered/legacy name ("flag8" |
+    "sq16" | "sq8" | "none"), or "default" (cfg.e2).  `b_weight` marks b as
+    a saturated Q_W weight (fixed-scale int8 decomposition for raw arrays).
+    QTensors without a carrier (e.g. the int8 KV cache) are consumed but
+    receive no gradient — they are non-differentiable by construction.
     """
+    return _qeinsum(cfg, spec, e_kind, b_weight, _tag(a), _tag(b), a, b)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _qeinsum(cfg, spec, e_kind, b_weight, a_tag, b_tag, a, b):
     if not cfg.quantize:
-        return jnp.einsum(spec, a, b)
+        return jnp.einsum(spec, qt_carrier(a), qt_carrier(b))
     if cfg.native:
-        a8, sa = qf.dec_int8(a, cfg.k_a)
-        b8, sb = _dec_b(cfg, b, b_weight)
-        y = _int_einsum(spec, a8, b8).astype(jnp.float32) * (sa * sb)
-        return _carrier(cfg, y)
-    return _carrier(cfg, jnp.einsum(spec, a, b))
+        qa = _fwd_quantize(cfg, a, False)
+        qb = _fwd_quantize(cfg, b, b_weight)
+        return _carrier(cfg, _qt_contract(spec, qa, qb))
+    return _carrier(cfg, jnp.einsum(spec, qt_carrier(a), qt_carrier(b)))
 
 
-def _qeinsum_fwd(cfg, spec, e_kind, b_weight, a, b):
+def _qeinsum_fwd(cfg, spec, e_kind, b_weight, a_tag, b_tag, a, b):
     if not cfg.quantize:
-        return jnp.einsum(spec, a, b), (a, b)
+        return jnp.einsum(spec, qt_carrier(a), qt_carrier(b)), \
+            (_save(a), _save(b))
     if cfg.native:
-        a8, sa = qf.dec_int8(a, cfg.k_a)
-        b8, sb = _dec_b(cfg, b, b_weight)
-        y = _int_einsum(spec, a8, b8).astype(jnp.float32) * (sa * sb)
-        # int8 residuals: the paper's 4x activation-memory saving
-        return _carrier(cfg, y), (a8, sa, b8, sb)
-    return _carrier(cfg, jnp.einsum(spec, a, b)), (a, b)
+        qa = _fwd_quantize(cfg, a, False)
+        qb = _fwd_quantize(cfg, b, b_weight)
+        y = _carrier(cfg, _qt_contract(spec, qa, qb))
+        # int payload residuals: the paper's 4x activation-memory saving
+        return y, (qa, qb)
+    return _carrier(cfg, jnp.einsum(spec, qt_carrier(a), qt_carrier(b))), \
+        (_save(a), _save(b))
 
 
-def _qeinsum_bwd(cfg, spec, e_kind, b_weight, res, g):
+def _qeinsum_bwd(cfg, spec, e_kind, b_weight, a_tag, b_tag, res, g):
     da_spec, db_spec = _bwd_specs(spec)
+    a_s, b_s = res
+    want_a = a_tag != "qt_frozen"
+    want_b = b_tag != "qt_frozen"
+
     if not cfg.quantize:
-        a, b = res
-        return jnp.einsum(da_spec, g, b), jnp.einsum(db_spec, a, g)
+        da = jnp.einsum(da_spec, g, qt_carrier(b_s)) if want_a else None
+        db = jnp.einsum(db_spec, qt_carrier(a_s), g) if want_b else None
+        return _wrap_ct(a_tag, a_s, da), _wrap_ct(b_tag, b_s, db)
 
-    kind = e_kind if e_kind != "default" else cfg.e2_kind
-    if not cfg.quant_e2:
-        kind = "none"
+    quantizer = _error_quantizer(cfg, e_kind)
     if cfg.native:
-        a8, sa, b8, sb = res
-        planes = (qf.dec_error(g, kind, cfg.k_e2) if kind != "none"
-                  else [qf.dec_int16(g, 16)])
-        da = jnp.zeros((), jnp.float32)
-        db = jnp.zeros((), jnp.float32)
-        for e_data, se in planes:
-            # e4 = W^T e3 and g_W = e3 x0^T on integer operands (Alg. 2)
-            da = da + _int_einsum(da_spec, e_data, b8).astype(jnp.float32) \
-                * (se * sb)
-            db = db + _int_einsum(db_spec, a8, e_data).astype(jnp.float32) \
-                * (sa * se)
-        return da, db
+        gq = quantizer.quantize(g)     # e3 = Q_E2(e2), decomposed once
+        da = db = None
+        if want_a:
+            # e4 = W^T e3 on integer operands (Alg. 2)
+            da = _qt_contract(da_spec, gq, b_s)
+        if want_b:
+            # g_W = e3 x0^T on integer operands (Alg. 2)
+            db = _qt_contract(db_spec, a_s, gq)
+        return _wrap_ct(a_tag, a_s, da), _wrap_ct(b_tag, b_s, db)
 
-    a, b = res
-    eq = qf.quant_error(g, kind, cfg.k_e2) if kind != "none" else g
-    return jnp.einsum(da_spec, eq, b), jnp.einsum(db_spec, a, eq)
+    eq = quantizer(g)
+    da = jnp.einsum(da_spec, eq, qt_carrier(b_s)) if want_a else None
+    db = jnp.einsum(db_spec, qt_carrier(a_s), eq) if want_b else None
+    return _wrap_ct(a_tag, a_s, da), _wrap_ct(b_tag, b_s, db)
 
 
-qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
+_qeinsum.defvjp(_qeinsum_fwd, _qeinsum_bwd)
 
 
-def qdense(cfg: QConfig, x: Array, w: Array,
-           e_kind: str = "default") -> Array:
+def qdense(cfg: QConfig, x, w: Array, e_kind="default") -> Array:
     """x @ Q_W(w): the Conv step of Alg. 1 for matmul architectures.
 
-    x: (..., K) on the activation grid;  w: (K, N) master weights.
+    x: (..., K) on the activation grid (Array or QTensor); w: (K, N) master
+    weights.  The 2-D contraction routes through the Pallas int8 kernel.
     """
     wq = qweight(cfg, w)
     xm = x.reshape((-1, x.shape[-1]))
@@ -207,15 +308,20 @@ def _conv(x, w, stride, padding):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
-def qconv(cfg: QConfig, x: Array, wq: Array, stride: int,
-          padding: str) -> Array:
+def qconv(cfg: QConfig, x, wq, stride: int, padding: str) -> Array:
     """Quantized conv: operands on grid; backward errors through Q_E2.
 
     Conv arithmetic runs on exact grid values in fp32 (integer-identical;
     see DESIGN.md §3 — XLA's int8 conv path is TPU-only, so the carrier is
-    fp32 while the *semantics* are fixed-point).
+    fp32 while the *semantics* are fixed-point).  QTensor operands
+    contribute their differentiable carriers.
     """
+    return _qconv(cfg, qt_carrier(x), qt_carrier(wq), stride, padding)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
+def _qconv(cfg: QConfig, x: Array, wq: Array, stride: int,
+           padding: str) -> Array:
     return _conv(x, wq, stride, padding)
 
 
@@ -226,8 +332,8 @@ def _qconv_fwd(cfg, x, wq, stride, padding):
 
 def _qconv_bwd(cfg, stride, padding, vjp, g):
     if cfg.quantize and cfg.quant_e2:
-        g = qf.quant_error(g, cfg.e2_kind, cfg.k_e2)   # e3 = Q_E2(...)
+        g = cfg.e2.make()(g)           # e3 = Q_E2(...)
     return vjp(g)
 
 
-qconv.defvjp(_qconv_fwd, _qconv_bwd)
+_qconv.defvjp(_qconv_fwd, _qconv_bwd)

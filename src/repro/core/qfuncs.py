@@ -124,18 +124,10 @@ def flag_qe2(x: Array, k: int = 8) -> Array:
 
 
 def quant_error(x: Array, kind: str, k_e: int) -> Array:
-    """Dispatch for error quantizers used on cotangents."""
-    if kind == "flag8":
-        return flag_qe2(x, 8)
-    if kind == "sq16":
-        return sq(x, 16)
-    if kind == "sq8":
-        return sq(x, 8)
-    if kind == "sq":
-        return sq(x, k_e)
-    if kind == "none":
-        return x
-    raise ValueError(f"unknown error quantizer {kind!r}")
+    """DEPRECATED shim: error-quantizer dispatch now lives in the quantizer
+    registry (qtensor.py); legacy string kinds resolve via ALIASES."""
+    from .qtensor import resolve_quantizer
+    return resolve_quantizer(kind, k_e)(x)
 
 
 # --------------------------------------------------------------------------
@@ -160,64 +152,43 @@ def ste(fn, x: Array) -> Array:
 
 
 def dec_int8(x: Array, k: int = 8):
-    """Decompose a grid tensor into (int8 data, fp32 scalar scale).
-
-    value = data * scale, scale a power of two.  Exact (lossless) whenever x
-    came from q_scaled/q_clip/sq at width <= k; otherwise it quantizes.
-    """
-    s = jnp.maximum(pow2_ceil(amax(x)), 2.0 ** -24)
-    step = s * 2.0 ** (1 - k)
-    lim = 2.0 ** (k - 1) - 1.0
-    data = jnp.clip(jnp.round(x / step), -lim, lim).astype(jnp.int8)
-    return data, step
+    """DEPRECATED shim for the "grid" quantizer: decompose a grid tensor
+    into (int8 data, fp32 scalar scale).  value = data * scale, scale a
+    power of two.  Exact (lossless) whenever x came from q_scaled/q_clip/sq
+    at width <= k; otherwise it quantizes."""
+    from .qtensor import get_quantizer
+    qt = get_quantizer("grid", k).quantize(x)
+    return qt.data, qt.scale
 
 
 def dec_int8_fixed(x: Array, k: int = 8):
-    """int8 decomposition with the FIXED step 2^(1-k) — exact for tensors
-    already saturated to (-1, 1) by q_clip (i.e. Q_W weights).  No amax
-    pass, no scalar collective; the int8 copy is what FSDP gathers."""
-    step = 2.0 ** (1 - k)
-    lim = 2.0 ** (k - 1) - 1.0
-    data = jnp.clip(jnp.round(x * (1.0 / step)), -lim, lim).astype(jnp.int8)
-    return data, jnp.float32(step)
+    """DEPRECATED shim for the "clip" quantizer's payload: int8 decomposition
+    with the FIXED step 2^(1-k) — exact for tensors already saturated to
+    (-1, 1) by q_clip (i.e. Q_W weights).  No amax pass, no scalar
+    collective; the int8 copy is what FSDP gathers."""
+    from .qtensor import get_quantizer
+    qt = get_quantizer("clip", k).quantize(x)
+    return qt.data, qt.scale
 
 
 def dec_int16(x: Array, k: int = 16):
-    """Same as dec_int8 for 16-bit payloads (e.g. sq16 errors)."""
-    s = jnp.maximum(pow2_ceil(amax(x)), 2.0 ** -24)
-    step = s * 2.0 ** (1 - k)
-    lim = 2.0 ** (k - 1) - 1.0
-    data = jnp.clip(jnp.round(x / step), -lim, lim).astype(jnp.int16)
-    return data, step
+    """DEPRECATED shim: dec_int8 for 16-bit payloads (e.g. sq16 errors)."""
+    from .qtensor import get_quantizer
+    qt = get_quantizer("grid", k).quantize(x)
+    return qt.data, qt.scale
 
 
 def dec_error(x: Array, kind: str, k_e: int):
-    """Decompose an error tensor into integer planes for native matmuls.
+    """DEPRECATED shim: decompose an error tensor into integer planes.
 
-    Returns a list of (data, scale) planes:
+    Registry-backed (see qtensor.Quantizer.planes).  Returns a list of
+    (data, scale) planes:
       sq8   -> [(int8, R*2^-7)]
       sq16  -> [(int16, R*2^-15)]
       flag8 -> [(int8 hi, Sc), (int8 lo, Sc*2^-7)]  (disjoint support; this is
                the TPU realization of the paper's 9-bit flag format: storage
                and both backward dots stay int8)
     """
-    if kind in ("sq8", "sq"):
-        k = 8 if kind == "sq8" else k_e
-        xq = sq(x, k)
-        return [dec_int8(xq, k)]
-    if kind == "sq16":
-        xq = sq(x, 16)
-        return [dec_int16(xq, 16)]
-    if kind == "flag8":
-        k = 8
-        r = pow2_round(amax(x))
-        sc = r / 2.0 ** (k - 1)
-        n = x / sc
-        lim = 2.0 ** (k - 1) - 1.0
-        isbig = jnp.abs(n) >= 1.0
-        hi = jnp.where(isbig, jnp.clip(jnp.round(n), -lim, lim), 0.0)
-        lo = jnp.where(isbig, 0.0,
-                       jnp.clip(jnp.round(n * 2.0 ** (k - 1)), -lim, lim))
-        return [(hi.astype(jnp.int8), sc),
-                (lo.astype(jnp.int8), sc * 2.0 ** (1 - k))]
-    raise ValueError(f"unknown error quantizer {kind!r}")
+    from .qtensor import resolve_quantizer
+    q = resolve_quantizer(kind, k_e)
+    return list(q.planes(q.quantize(x)))

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from . import qfuncs as qf
 from .qconfig import QConfig
+from .qtensor import get_quantizer
 
 Array = jax.Array
 
@@ -25,10 +26,11 @@ EPS_Q = 2.0 ** -8  # epsilon_q: small fixed-point value (Eq. 12)
 
 
 def _qs(cfg: QConfig, t: Array, k: int) -> Array:
-    """Direct-quantize with STE when quantization is on."""
+    """Direct-quantize with STE when quantization is on (registry-resolved;
+    the "direct" quantizer's grid output is bit-identical to qf.q_direct)."""
     if not cfg.quantize or not cfg.quant_bn:
         return t
-    return qf.ste(lambda v: qf.q_direct(v, k), t)
+    return qf.ste(get_quantizer("direct", k), t)
 
 
 def _maybe_stop(cfg: QConfig, t: Array) -> Array:

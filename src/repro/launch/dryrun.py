@@ -168,6 +168,9 @@ def _depth_points(acfg):
 
 def _cost_metrics(compiled):
     ca = compiled.cost_analysis() or {}
+    # older jax returns a one-element list of dicts, newer a flat dict
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     colls = parse_collectives(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

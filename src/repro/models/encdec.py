@@ -47,10 +47,10 @@ def _attn(cfg, acfg, p, x, kv_src, *, causal, q_pos, k_pos, cache=None,
             L.kv_quantize(kh[:, 0], cache["k_scale"]))
         v8 = cache["v8"].at[bidx, pvec].set(
             L.kv_quantize(vh[:, 0], cache["v_scale"]))
-        kf = L.kv_dequantize(k8, cache["k_scale"])
-        vf = L.kv_dequantize(v8, cache["v_scale"])
-        o = L.decode_attention(cfg, qh, kf, vf, q_pos=pvec,
-                               t_valid=pvec.max() + 1)
+        # the int8 cache IS the matmul operand: no dequantize round trip
+        o = L.decode_attention(cfg, qh, L.kv_qtensor(k8, cache["k_scale"]),
+                               L.kv_qtensor(v8, cache["v_scale"]),
+                               q_pos=pvec, t_valid=pvec.max() + 1)
         new_cache = (k8, v8)
     elif s == 1:                                      # decode cross-attn
         o = L.decode_attention(cfg, qh, kh, vh, q_pos=k_pos[-1:] * 0 +
@@ -255,8 +255,9 @@ class EncDec:
                 self.q, a, lp, h, None, causal=True, q_pos=pvec, k_pos=pvec,
                 cache={"k8": ck, "v8": cv, "k_scale": cache["k_scale"][0],
                        "v_scale": cache["v_scale"][0]})
-            kf = L.kv_dequantize(cxk, cache["x_scale"][0])
-            vf = L.kv_dequantize(cxv, cache["x_scale"][0])
+            # cross K/V stay int8 QTensors end-to-end (no dequantize pass)
+            kf = L.kv_qtensor(cxk, cache["x_scale"][0])
+            vf = L.kv_qtensor(cxv, cache["x_scale"][0])
             h, _ = _attn(self.q, a, lp, h, None, causal=False, q_pos=pvec,
                          k_pos=jnp.arange(kf.shape[1]),
                          cache={"kf": kf, "vf": vf}, prefix="x_")

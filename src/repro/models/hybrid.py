@@ -52,8 +52,9 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
         bidx = jnp.arange(b)
         k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
         v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
-        o = L.decode_attention(cfg, qh, L.kv_dequantize(k8, ks),
-                               L.kv_dequantize(v8, vs), q_pos=pvec,
+        # the int8 cache IS the matmul operand: no dequantize round trip
+        o = L.decode_attention(cfg, qh, L.kv_qtensor(k8, ks),
+                               L.kv_qtensor(v8, vs), q_pos=pvec,
                                t_valid=pvec.max() + 1)
         new_cache = (k8, v8)
     x = x + qdense(cfg, o.reshape(b, s, -1), p["wo"])

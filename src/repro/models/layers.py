@@ -2,9 +2,9 @@
 SwiGLU MLP, initializers — all built on the WAGEUBN quantized ops.
 
 Attention adaptation of the paper's scheme (DESIGN.md §3): QK^T and PV are
-activation-activation int8 matmuls (error quantizer = e_attn_kind, default
-sq8); softmax logits run on the fp32 VPU; probabilities are quantized onto
-the k_A grid (they live in [0,1], where direct quantization is exact-range).
+activation-activation int8 matmuls (error quantizer = cfg.e_attn, default
+QuantSpec("sq", 8)); softmax logits run on the fp32 VPU; probabilities are
+quantized onto the k_A grid ([0,1], where direct quantization is exact-range).
 """
 from __future__ import annotations
 
@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import qact, qdense, qeinsum, qprobs, qrmsnorm, qlayernorm
+from repro.core import (QTensor, qact, qdense, qeinsum, qprobs, qrmsnorm,
+                        qlayernorm, qt_carrier)
 from repro.core import qfuncs as qf
 from repro.core.qconfig import QConfig
 
@@ -90,12 +91,15 @@ def rope(x: Array, pos: Array, theta: float = 1e4) -> Array:
 
 
 def _attn_scores(cfg, q, k):
-    """(B,S,KV,G,dh) x (B,T,KV,dh) -> (B,S,KV,G,T) through qeinsum."""
-    return qeinsum(cfg, "bskgd,btkd->bskgt", cfg.e_attn_kind, False, q, k)
+    """(B,S,KV,G,dh) x (B,T,KV,dh) -> (B,S,KV,G,T) through qeinsum.
+
+    q/k may be QTensors (e.g. the int8 KV cache in decode): their payloads
+    feed the integer dot directly, with no re-decomposition."""
+    return qeinsum(cfg, "bskgd,btkd->bskgt", cfg.e_attn, False, q, k)
 
 
 def _attn_out(cfg, p, v):
-    return qeinsum(cfg, "bskgt,btkd->bskgd", cfg.e_attn_kind, False, p, v)
+    return qeinsum(cfg, "bskgt,btkd->bskgd", cfg.e_attn, False, p, v)
 
 
 def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
@@ -106,6 +110,10 @@ def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
     q: (B, S, H, dh) on the activation grid; k/v: (B, T, KV, dh).
     Returns (B, S, H, dh) normalized output on the activation grid.
     """
+    # the online-softmax rescale math + chunk padding/scanning run on the
+    # fp32 grid carriers; QTensor inputs degrade here (differentiably) and
+    # the per-chunk qeinsums re-enter the integer path
+    q, k, v = qt_carrier(q), qt_carrier(k), qt_carrier(v)
     b, s, h, dh = q.shape
     t, kv = k.shape[1], k.shape[2]
     g = h // kv
@@ -168,12 +176,13 @@ def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
     return qact(cfg, "none", out)
 
 
-def decode_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
+def decode_attention(cfg: QConfig, q, k, v, *,
                      q_pos: Array, t_valid: Array) -> Array:
     """Single-step attention against a full (possibly int8) KV cache.
 
-    q: (B, 1, H, dh); k/v: (B, T, KV, dh) grid fp32 (already dequantized).
-    t_valid masks cache positions >= current length.
+    q: (B, 1, H, dh); k/v: (B, T, KV, dh) — QTensors straight from the int8
+    cache (their payloads feed the integer dots with no dequantize round
+    trip) or grid fp32 arrays.  t_valid masks positions >= current length.
     """
     b, s, h, dh = q.shape
     t, kv = k.shape[1], k.shape[2]
@@ -197,7 +206,12 @@ def decode_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
 
 
 def kv_cache_init(n_layers: int, b: int, t: int, kv: int, dh: int):
-    """int8 cache + per-layer pow2 scales (paper k_A applied to the cache)."""
+    """int8 cache + per-layer pow2 scales (paper k_A applied to the cache).
+
+    Stored as flat int8 + scale arrays (checkpoint/pspec friendly); cache
+    reads wrap them back into QTensors via `kv_qtensor` so decode matmuls
+    consume the payloads directly.
+    """
     return {
         "k": jnp.zeros((n_layers, b, t, kv, dh), jnp.int8),
         "v": jnp.zeros((n_layers, b, t, kv, dh), jnp.int8),
@@ -207,11 +221,23 @@ def kv_cache_init(n_layers: int, b: int, t: int, kv: int, dh: int):
     }
 
 
-def kv_quantize(x: Array, step: Array):
+def kv_quantize(x, step):
+    """Payload on the int8 cache grid.  QTensor inputs requantize payload-
+    to-payload (a pow2 shift saturating to int8 — NO amax pass); arrays
+    take the legacy path."""
+    if isinstance(x, QTensor):
+        return x.requantize(step, k=8)
     return jnp.clip(jnp.round(x / step), -127, 127).astype(jnp.int8)
 
 
+def kv_qtensor(x8: Array, step: Array) -> QTensor:
+    """Wrap a cache slice as a (non-differentiable) QTensor."""
+    return QTensor(x8, step, 8)
+
+
 def kv_dequantize(x8: Array, step: Array) -> Array:
+    """DEPRECATED: decode paths consume the cache via `kv_qtensor` now (the
+    payload feeds the integer dots directly); kept for external callers."""
     return x8.astype(jnp.float32) * step
 
 

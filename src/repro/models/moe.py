@@ -21,12 +21,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import SHARD_MAP_KW as _SM_KW
+from repro.compat import shard_map as _shard_map
 
-from repro.core import qact, qeinsum, qweight
+from repro.core import qact, qeinsum, qt_carrier, qweight
 from repro.core.qconfig import QConfig
 
 
@@ -99,7 +97,13 @@ def _moe_local(cfg: QConfig, acfg, x, rw, wg, wu, wd, e_off):
 
 def moe_ffn(cfg: QConfig, acfg, x, p, mesh=None, dp_axes=("data",),
             tp_axis="model"):
-    """x: (B, S, D) on the activation grid -> (B, S, D)."""
+    """x: (B, S, D) on the activation grid -> (B, S, D).
+
+    QTensor inputs degrade to their grid carrier here: the capacity
+    dispatch (gather + gate mask) and shard_map specs operate on flat fp32;
+    the expert matmuls re-enter the integer path via qeinsum/qweight.
+    """
+    x = qt_carrier(x)
     b, s, d = x.shape
     x2 = x.reshape(b * s, d)
 
@@ -119,6 +123,6 @@ def moe_ffn(cfg: QConfig, acfg, x, p, mesh=None, dp_axes=("data",),
         f, mesh=mesh,
         in_specs=(P(dp_axes, None), P(None, None), P(tp_axis, None, None),
                   P(tp_axis, None, None), P(tp_axis, None, None)),
-        out_specs=P(dp_axes, None), check_vma=False)
+        out_specs=P(dp_axes, None), **_SM_KW)
     y = fn(x2, p["router"], p["wg"], p["wu"], p["wd"])
     return y.reshape(b, s, d)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import qact, qconv, qbatchnorm, qweight
+from repro.core import qact, qconv, qbatchnorm, qt_carrier, qweight
 from repro.core.qconfig import QConfig
 from repro.configs.base import ArchConfig
 from . import layers as L
@@ -145,7 +145,7 @@ class ResNet:
             for bi, bp in enumerate(blocks):
                 stride = 2 if (si > 0 and bi == 0) else 1
                 x = self._block(bp, x, stride)
-        x = jnp.mean(x, axis=(1, 2))
+        x = jnp.mean(qt_carrier(x), axis=(1, 2))
         return x @ params["fc"] + params["fc_b"]      # exempt last layer
 
     def loss(self, params, batch, key=None):

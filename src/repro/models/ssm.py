@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import qact, qdense, qeinsum, qweight, qbn_param, qrmsnorm
+from repro.core import (qact, qdense, qeinsum, qweight, qbn_param, qrmsnorm,
+                        qt_carrier)
 from repro.core.qconfig import QConfig
 from repro.configs.base import ArchConfig
 from . import layers as L
@@ -26,7 +27,7 @@ Array = jax.Array
 def causal_conv1d(cfg, x, w, b):
     """Depthwise causal conv over seq.  x: (B,S,C), w: (K,C), b: (C,)."""
     k = w.shape[0]
-    wq = qweight(cfg, w)
+    wq = qt_carrier(qweight(cfg, w))   # conv runs on the fp32 grid carrier
     xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
     y = lax.conv_general_dilated(
         xp, wq[:, None, :], window_strides=(1,), padding="VALID",
@@ -117,7 +118,7 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
     else:
         conv_s = state["conv"]                       # (B, K-1, di)
         window = jnp.concatenate([conv_s, xi], axis=1)
-        wq = qweight(cfg, p["conv_w"])
+        wq = qt_carrier(qweight(cfg, p["conv_w"]))
         xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
         new_conv = window[:, 1:]
     xc = qact(cfg, "silu", xc)
@@ -226,7 +227,7 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
     if mode == "train":
         xc = qact(cfg, "silu", causal_conv1d(cfg, xi, p["conv_w"],
                                              p["conv_b"]))
-        xh = xc.reshape(bsz, s, hm, pdim)
+        xh = qt_carrier(xc).reshape(bsz, s, hm, pdim)
         alog = dt * a_neg                              # (B,S,Hm) log decays
         chunk = min(chunk, s)
         pad = -s % chunk
@@ -248,14 +249,14 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
             xcb, dtb, alb, bsb, csb = inp
             cum = _segsum_decay(alb)                   # (B,c,Hm)
             # intra-chunk: quantized score matmul (beyond-paper INT8 SSD)
-            scores = qeinsum(cfg, "btn,bsn->bts", cfg.e_attn_kind, False, csb, bsb)
+            scores = qeinsum(cfg, "btn,bsn->bts", cfg.e_attn, False, csb, bsb)
             ldec = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :],
                                     -60.0, 0.0))
             tt = jnp.arange(xcb.shape[1])
             causal = (tt[:, None] >= tt[None, :])[None, :, :, None]
             m = scores[:, :, :, None] * ldec * dtb[:, None, :, :] * causal
             m = qact(cfg, "none", m)
-            y_in = qeinsum(cfg, "btsh,bshp->bthp", cfg.e_attn_kind, False, m, xcb)
+            y_in = qeinsum(cfg, "btsh,bshp->bthp", cfg.e_attn, False, m, xcb)
             # inter-chunk
             dec0 = jnp.exp(cum)                        # (B,c,Hm)
             y_x = jnp.einsum("btn,bhnp->bthp", csb, s0) * dec0[..., None]
@@ -280,7 +281,7 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
     else:
         conv_s = state["conv"]
         window = jnp.concatenate([conv_s, xi], axis=1)
-        wq = qweight(cfg, p["conv_w"])
+        wq = qt_carrier(qweight(cfg, p["conv_w"]))
         xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
         xc = qact(cfg, "silu", xc)
         xh = xc.reshape(bsz, 1, hm, pdim)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core import qfuncs as qf
 from repro.core.qconfig import QConfig
+from repro.core.qtensor import get_quantizer
 
 
 class MomentumState(NamedTuple):
@@ -50,6 +51,26 @@ def dr_bits_schedule(step: int | jax.Array, boundaries=(), base_bits: int = 8):
         if step >= b:
             bits -= 1
     return max(bits, 2)
+
+
+def _grad_quantizer(cfg: QConfig, dr_bits: int):
+    """Resolve cfg.g through the registry, honoring its static params.
+
+    The per-step dr schedule and the legacy stochastic_g knob are injected
+    only where the registered quantizer declares those fields AND the spec
+    did not pin them explicitly — an explicit QuantSpec param is
+    authoritative (e.g. params=(("stochastic", False),) opts out of both
+    stochastic rounding and the schedule default)."""
+    import dataclasses
+    params = dict(cfg.g.params)
+    fields = {f.name for f in
+              dataclasses.fields(type(get_quantizer(cfg.g.kind, cfg.g.k,
+                                                    cfg.g.params)))}
+    if "dr_bits" in fields:
+        params.setdefault("dr_bits", dr_bits)
+    if "stochastic" in fields:
+        params.setdefault("stochastic", cfg.stochastic_g)
+    return get_quantizer(cfg.g.kind, cfg.g.k, tuple(sorted(params.items())))
 
 
 def init_momentum(params: Any) -> MomentumState:
@@ -88,11 +109,15 @@ def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
             if not cfg.quant_g:
                 gq = g
             elif lab == "w":
-                gq = qf.cq(g, jax.random.fold_in(key, i), dr_bits, cfg.k_gc,
-                           stochastic=cfg.stochastic_g)
+                # registry-resolved gradient quantizer (cfg.g names kind,
+                # k_gc and static params); the dr schedule and rounding mode
+                # are per-step parameters injected only when the registered
+                # quantizer declares those fields (i.e. CQ-family kinds)
+                gq = _grad_quantizer(cfg, dr_bits)(
+                    g, key=jax.random.fold_in(key, i))
             elif lab in ("gamma", "beta"):
                 k = cfg.k_ggamma if lab == "gamma" else cfg.k_gbeta
-                gq = qf.q_direct(g, k)
+                gq = get_quantizer("direct", k)(g)
             else:
                 raise ValueError(f"unknown label {lab!r}")
             if not cfg.quant_u:       # Table II runs: FP32 update path

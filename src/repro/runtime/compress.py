@@ -1,16 +1,23 @@
 """Integer gradient compression collectives (shard_map + ppermute ring).
 
 The paper's CQ already puts weight gradients on a 15-bit grid with a shared
-power-of-two scale — so the gradient wire format can be int16 (half of f32
-traffic) with NO extra information loss beyond what WAGEUBN's own optimizer
-quantization discards.  We implement the ring reduce-scatter manually so
-every hop's message really is int16 on the wire (XLA's native all-reduce
-would keep the accumulator dtype on the wire).
+power-of-two scale — so the gradient wire format can be an integer QTensor
+(int16 halves f32 traffic, int8 quarters it) with NO extra information loss
+beyond what WAGEUBN's own optimizer quantization discards.  We implement the
+ring reduce-scatter manually so every hop's message really is the integer
+payload on the wire (XLA's native all-reduce would keep the accumulator
+dtype on the wire).
+
+The wire format IS a QTensor: `_wire_quantize` decomposes the local chunks
+once into (int payload, shared pow2 scale) and the ring ships the payload;
+`wire_quantize` is exported for tests and for QTensor-native callers that
+want to hand the payload to other transports.
 
 Overflow control: with n shards, partial sums of b-bit operands need
 b + ceil(log2 n) bits; we pre-shift the grid by ceil(log2 n) so every
-partial sum stays within int16 (the discarded low bits are below CQ's own
-grid once divided by n — documented trade-off, error-feedback hook below).
+partial sum stays within the wire width (the discarded low bits are below
+CQ's own grid once divided by n — documented trade-off, error-feedback hook
+below).
 """
 from __future__ import annotations
 
@@ -19,31 +26,46 @@ import math
 import jax
 import jax.numpy as jnp
 from jax import lax
-
-try:
-    from jax import shard_map as _shard_map
-except ImportError:
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import SHARD_MAP_KW as _SM_KW
+from repro.compat import shard_map as _shard_map
+from repro.core import qfuncs as qf
+from repro.core.qtensor import QTensor, payload_dtype
 
-def _ring_reduce_scatter(x16, axis_name, n):
-    """x16: (n, chunk) int16 local contributions per rank.
+
+def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
+    """Decompose gradient chunks into the integer wire QTensor.
+
+    scale = pow2_ceil(amax) * 2^(1 - bits + shift): the pre-shift keeps
+    n-way partial sums inside the wire width.  `amax` must already be the
+    global max across participating shards (pmax'ed by the caller).
+    """
+    lim = 2.0 ** (bits - 1) - 1.0
+    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
+    data = jnp.clip(jnp.round(chunks / scale), -lim,
+                    lim).astype(payload_dtype(bits))
+    return QTensor(data, scale, bits)
+
+
+def _ring_reduce_scatter(qt: QTensor, axis_name, n):
+    """qt.data: (n, chunk) integer contributions per rank.
 
     Classic ring: rank r starts with its contribution to chunk (r-1)%n and
     after n-1 hops holds the fully reduced chunk r.  Every message on the
-    wire is int16.
+    wire is the integer payload dtype (int8/int16), never fp32.
     """
+    x_int, lim = qt.data, float(2.0 ** (qt.k - 1) - 1.0)
+    dtype = x_int.dtype
     idx = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
-    acc = jnp.take(x16, (idx - 1) % n, axis=0).astype(jnp.int32)
+    acc = jnp.take(x_int, (idx - 1) % n, axis=0).astype(jnp.int32)
 
     def hop(i, acc):
-        msg = jnp.clip(acc, -32767, 32767).astype(jnp.int16)  # int16 wire
+        msg = jnp.clip(acc, -lim, lim).astype(dtype)   # integer wire
         msg = lax.ppermute(msg, axis_name, perm)
         k = (idx - 2 - i) % n
-        return msg.astype(jnp.int32) + jnp.take(x16, k, axis=0)
+        return msg.astype(jnp.int32) + jnp.take(x_int, k, axis=0)
 
     acc = lax.fori_loop(0, n - 1, hop, acc) if n > 1 else acc
     return acc
@@ -51,8 +73,8 @@ def _ring_reduce_scatter(x16, axis_name, n):
 
 def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
     """Reduce-scatter x (replicated-shape per device) over `axis_name`,
-    quantizing every wire message to int16.  Returns the per-device shard of
-    the mean, fp32.
+    quantizing every wire message to the `bits`-wide integer payload.
+    Returns the per-device shard of the mean, fp32.
     """
     n = mesh.shape[axis_name]
     shift = max(0, math.ceil(math.log2(max(n, 1))))
@@ -63,22 +85,18 @@ def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
         flat = jnp.pad(flat, (0, pad))
         chunks = flat.reshape(n, -1)
         amax = lax.pmax(jnp.max(jnp.abs(chunks)), axis_name)
-        safe = jnp.where(amax > 0, amax, 1.0)
-        scale = jnp.exp2(jnp.ceil(jnp.log2(safe))) * 2.0 ** (
-            1 - bits + shift)
-        q = jnp.clip(jnp.round(chunks / scale), -32767, 32767).astype(
-            jnp.int16)
-        acc = _ring_reduce_scatter(q, axis_name, n)
-        return acc.astype(jnp.float32) * scale / n
+        qt = wire_quantize(chunks, amax, bits, shift)
+        acc = _ring_reduce_scatter(qt, axis_name, n)
+        return acc.astype(jnp.float32) * qt.scale / n
 
     spec = P(*((None,) * x.ndim))
     fn = _shard_map(f, mesh=mesh, in_specs=(spec,),
-                    out_specs=P(axis_name), check_vma=False)
+                    out_specs=P(axis_name), **_SM_KW)
     return fn(x)
 
 
 def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
-    """int16-wire all-reduce mean = ring reduce-scatter + all-gather."""
+    """integer-wire all-reduce mean = ring reduce-scatter + all-gather."""
     n = mesh.shape[axis_name]
     shift = max(0, math.ceil(math.log2(max(n, 1))))
 
@@ -89,20 +107,16 @@ def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
         flat = jnp.pad(flat, (0, pad))
         chunks = flat.reshape(n, -1)
         amax = lax.pmax(jnp.max(jnp.abs(chunks)), axis_name)
-        safe = jnp.where(amax > 0, amax, 1.0)
-        scale = jnp.exp2(jnp.ceil(jnp.log2(safe))) * 2.0 ** (
-            1 - bits + shift)
-        q = jnp.clip(jnp.round(chunks / scale), -32767, 32767).astype(
-            jnp.int16)
-        acc = _ring_reduce_scatter(q, axis_name, n)
+        qt = wire_quantize(chunks, amax, bits, shift)
+        acc = _ring_reduce_scatter(qt, axis_name, n)
         # all-gather the reduced chunks; rank i holds chunk i so rank order
         # IS chunk order
         gathered = lax.all_gather(acc, axis_name, axis=0)  # (n, chunk)
         full = gathered.reshape(-1)
         full = full[: flat.size - pad] if pad else full
-        return (full.astype(jnp.float32) * scale / n).reshape(shape)
+        return (full.astype(jnp.float32) * qt.scale / n).reshape(shape)
 
     spec = P(*((None,) * x.ndim))
     fn = _shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                    check_vma=False)
+                    **_SM_KW)
     return fn(x)

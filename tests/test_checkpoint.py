@@ -67,3 +67,20 @@ def test_elastic_restore_new_sharding(tmp_path):
                               pspec_tree={"w": P("data", None)})
     np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
     assert got["w"].sharding.spec == P("data", None)
+
+
+def test_qtensor_leaves_roundtrip(tmp_path):
+    """QTensor pytrees (int8 KV caches, wire payloads) checkpoint and
+    restore through the named-path keys (GetAttrKey -> 'cache/k/data')."""
+    from repro.core import QTensor, get_quantizer
+
+    x = jnp.arange(24, dtype=jnp.float32).reshape(4, 6) / 32.0
+    qt = get_quantizer("scaled", 8).quantize(x)
+    tree = {"cache": {"k": qt}, "step": jnp.int32(3)}
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, tree)
+    got, step, _ = cm.restore(tree)
+    assert isinstance(got["cache"]["k"], QTensor)
+    assert got["cache"]["k"].data.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got["cache"]["k"].dequantize()),
+                                  np.asarray(qt.dequantize()))

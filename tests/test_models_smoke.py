@@ -60,6 +60,36 @@ def test_arch_smoke_serve_step(name):
     assert not bool(jnp.isnan(logits).any())
 
 
+@pytest.mark.parametrize("name", ["granite-3-8b", "granite-moe-1b-a400m",
+                                  "falcon-mamba-7b", "zamba2-7b",
+                                  "seamless-m4t-large-v2"])
+def test_arch_smoke_native_train_step(name):
+    """One representative arch per family under NATIVE mode: activations and
+    weights flow as int8 QTensors into the integer matmuls (fwd + bwd)."""
+    acfg = get(name).reduced()
+    model = build_model(acfg, preset("full8", "native"))
+    params = model.init(jax.random.PRNGKey(0))
+    (loss, _), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, _batch(acfg))
+    assert not bool(jnp.isnan(loss)), name
+    gmax = max(float(jnp.abs(g).max()) for g in jax.tree.leaves(grads))
+    assert gmax > 0, name
+
+
+@pytest.mark.parametrize("name", ["granite-3-8b", "zamba2-7b"])
+def test_arch_smoke_native_serve_step(name):
+    """Native decode: the int8 KV cache is consumed as QTensors — cache
+    payloads feed the attention matmuls with no dequantize round trip."""
+    acfg = get(name).reduced()
+    model = build_model(acfg, preset("full8", "native"))
+    params = model.init(jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, acfg.vocab)
+    cache, logits = model.prefill(params, tok[:, :-1], S + 4)
+    cache, logits = model.serve_step(params, cache, tok[:, -1])
+    assert logits.shape == (B, acfg.vocab_padded)
+    assert not bool(jnp.isnan(logits).any())
+
+
 @pytest.mark.parametrize("name", ["resnet18", "resnet34", "resnet50"])
 def test_resnet_smoke(name):
     acfg = get(name).reduced()

@@ -92,12 +92,13 @@ def test_qeinsum_batched_spec():
 
 
 def test_native_int8_residuals():
-    """Native qeinsum saves int8 residuals (the 4x activation memory win)."""
+    """Native qeinsum saves int8 QTensor residuals (the 4x memory win)."""
     cfg = preset("full8", "native")
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.3
     w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
     from repro.core.qdense import _qeinsum_fwd
-    _, res = _qeinsum_fwd(cfg, "mk,kn->mn", "default", True, x,
-                          qf.q_clip(w, 8))
-    a8, sa, b8, sb = res
-    assert a8.dtype == jnp.int8 and b8.dtype == jnp.int8
+    _, res = _qeinsum_fwd(cfg, "mk,kn->mn", "default", True, "arr", "arr",
+                          x, qf.q_clip(w, 8))
+    qa, qb = res
+    assert qa.data.dtype == jnp.int8 and qb.data.dtype == jnp.int8
+    assert qa.carrier is None and qb.carrier is None

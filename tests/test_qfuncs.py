@@ -3,6 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# optional dev dependency: a missing extra must never break suite collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import qfuncs as qf

@@ -1,0 +1,427 @@
+"""QTensor pytree + quantizer registry: round-trip exactness vs the legacy
+qfuncs free functions, multi-plane recomposition, pytree transparency under
+jit/grad/scan, registry/alias dispatch, and the zero-redundant-decomposition
+guarantee of native qeinsum on pre-quantized operands."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QTensor, QuantSpec, get_quantizer, preset, qact,
+                        qdense, qeinsum, qweight, quantize_ste,
+                        registered_quantizers, resolve_quantizer)
+from repro.core import qfuncs as qf
+from repro.core.qtensor import legacy_kind, spec_from_alias
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jax.random.normal(jax.random.PRNGKey(0), (7, 33)) * 0.7
+
+
+# --------------------------------------------------------------------------
+# round-trips: dequantize(quantize(x)) == legacy function output, bit-exact
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,k,legacy", [
+    ("clip", 8, lambda x: qf.q_clip(x, 8)),
+    ("clip", 4, lambda x: qf.q_clip(x, 4)),
+    ("scaled", 8, lambda x: qf.q_scaled(x, 8)),
+    ("sq", 8, lambda x: qf.sq(x, 8)),
+    ("sq", 16, lambda x: qf.sq(x, 16)),
+    ("flag", 8, lambda x: qf.flag_qe2(x, 8)),
+    ("flag", 16, lambda x: qf.flag_qe2(x, 16)),
+])
+def test_quantizer_roundtrip_bitexact(x, kind, k, legacy):
+    q = get_quantizer(kind, k)
+    qt = q.quantize(x)
+    np.testing.assert_array_equal(np.asarray(q.dequantize(qt)),
+                                  np.asarray(legacy(x)))
+    # __call__ IS the legacy function
+    np.testing.assert_array_equal(np.asarray(q(x)), np.asarray(legacy(x)))
+
+
+def test_direct_roundtrip_in_range():
+    """Direct quantization payload round-trip is exact on the representable
+    range |x| <= 1 - 2^(1-k) (q_direct itself never clips)."""
+    for k in (4, 8, 16):
+        lim = (2.0 ** (k - 1) - 1.0) / 2.0 ** (k - 1)
+        x = jnp.linspace(-lim, lim, 257)
+        q = get_quantizer("direct", k)
+        np.testing.assert_array_equal(
+            np.asarray(q.dequantize(q.quantize(x))),
+            np.asarray(qf.q_direct(x, k)))
+
+
+def test_cq_roundtrip_bitexact(x):
+    q = get_quantizer("cq", 15, (("dr_bits", 8), ("stochastic", True)))
+    key = jax.random.PRNGKey(3)
+    got = q.dequantize(q.quantize(x, key=key))
+    want = qf.cq(x, key, 8, 15, stochastic=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    qd = get_quantizer("cq", 15, (("dr_bits", 6), ("stochastic", False)))
+    np.testing.assert_array_equal(
+        np.asarray(qd.dequantize(qd.quantize(x))),
+        np.asarray(qf.cq(x, None, 6, 15, stochastic=False)))
+
+
+def test_flag8_planes_disjoint_and_recompose(x):
+    """Σ planes == flag_qe2(x) bit-exactly, planes have disjoint support,
+    both payloads are true int8."""
+    q = get_quantizer("flag", 8)
+    qt = q.quantize(x * 3.0)
+    (hi, s_hi), (lo, s_lo) = qt.planes()
+    assert hi.dtype == jnp.int8 and lo.dtype == jnp.int8
+    assert not np.any((np.asarray(hi) != 0) & (np.asarray(lo) != 0))
+    recomposed = hi.astype(jnp.float32) * s_hi + lo.astype(jnp.float32) * s_lo
+    np.testing.assert_array_equal(np.asarray(recomposed),
+                                  np.asarray(qf.flag_qe2(x * 3.0, 8)))
+
+
+def test_flag8_boundary_values_exact():
+    """Payloads just below the regime boundary (|n| in [127.5/128, 1)) must
+    recompose to the same value the scalar flag_qe2 formula produces."""
+    # amax 1.0 -> sc = 2^-7; values near (but below) sc*... boundary
+    x = jnp.asarray([1.0, 2.0 ** -7 * 0.999, -2.0 ** -7 * 0.997,
+                     2.0 ** -7 * 127.7 / 128.0, 0.0], jnp.float32)
+    q = get_quantizer("flag", 8)
+    np.testing.assert_array_equal(
+        np.asarray(q.dequantize(q.quantize(x))),
+        np.asarray(qf.flag_qe2(x, 8)))
+
+
+def test_grid_lossless_on_grid_tensors(x):
+    for k, fn in ((8, lambda t: qf.q_scaled(t, 8)), (16, lambda t: qf.sq(t, 16))):
+        xg = fn(x)
+        q = get_quantizer("grid", k)
+        np.testing.assert_array_equal(np.asarray(q.dequantize(q.quantize(xg))),
+                                      np.asarray(xg))
+
+
+# --------------------------------------------------------------------------
+# registry + aliases
+# --------------------------------------------------------------------------
+
+
+def test_registry_contains_core_kinds():
+    names = registered_quantizers()
+    for n in ("clip", "scaled", "sq", "flag", "cq", "direct", "grid", "none"):
+        assert n in names
+
+
+def test_legacy_aliases_resolve(x):
+    np.testing.assert_array_equal(
+        np.asarray(resolve_quantizer("flag8")(x)),
+        np.asarray(qf.flag_qe2(x, 8)))
+    np.testing.assert_array_equal(
+        np.asarray(resolve_quantizer("sq16")(x)), np.asarray(qf.sq(x, 16)))
+    # bare "sq" takes the default k from its context
+    np.testing.assert_array_equal(
+        np.asarray(resolve_quantizer("sq", 12)(x)), np.asarray(qf.sq(x, 12)))
+    assert spec_from_alias("sq16").k == 16
+    assert spec_from_alias("dec_int8_fixed").kind == "clip"
+    assert legacy_kind(QuantSpec("flag", 8)) == "flag8"
+    with pytest.raises(ValueError):
+        resolve_quantizer("no_such_quantizer")
+
+
+def test_legacy_shims_delegate_to_registry(x):
+    """quant_error/dec_error are registry-backed; outputs stay bit-exact."""
+    np.testing.assert_array_equal(np.asarray(qf.quant_error(x, "flag8", 8)),
+                                  np.asarray(qf.flag_qe2(x, 8)))
+    planes = qf.dec_error(x, "flag8", 8)
+    assert len(planes) == 2 and planes[0][0].dtype == jnp.int8
+    d8, s8 = qf.dec_int8(qf.q_scaled(x, 8), 8)
+    np.testing.assert_array_equal(
+        np.asarray(d8.astype(jnp.float32) * s8), np.asarray(qf.q_scaled(x, 8)))
+    df, sf = qf.dec_int8_fixed(qf.q_clip(x, 8), 8)
+    assert float(sf) == 2.0 ** -7
+
+
+def test_qconfig_string_alias_equivalence():
+    """Deprecated string fields and structured specs build identical cfgs."""
+    a = preset("full8").replace(e2_kind="sq16")
+    b = preset("full8").replace(e2=QuantSpec("sq", 16))
+    assert a.e2 == b.e2 == QuantSpec("sq", 16)
+    assert a.e2_kind == b.e2_kind == "sq16"
+    assert a.k_e2 == b.k_e2 == 16
+    cfg = preset("e2_16")
+    assert cfg.e2 == QuantSpec("sq", 16) and cfg.e2_kind == "sq16"
+    assert preset("full8").e_attn == QuantSpec("sq", 8)
+    assert preset("full8").e_attn_kind == "sq8"
+
+
+def test_qconfig_spec_survives_replace_roundtrip():
+    """Specs with non-alias widths or custom params must survive replace()
+    (the deprecated canonical strings carried through must not win)."""
+    from repro.core import QConfig
+    c = QConfig(e_attn=QuantSpec("sq", 12)).replace(mode="native")
+    assert c.e_attn == QuantSpec("sq", 12)
+    c2 = preset("full8").replace(e2=QuantSpec("sq", 16)).replace(mode="native")
+    assert c2.e2 == QuantSpec("sq", 16) and c2.k_e2 == 16
+
+
+def test_qconfig_spec_width_wins_over_legacy_field():
+    """Structured specs are authoritative for k; legacy width fields sync
+    from them (and still work as constructor/replace conveniences)."""
+    c = preset("full8").replace(a=QuantSpec("scaled", 4))
+    assert c.a == QuantSpec("scaled", 4) and c.k_a == 4
+    c2 = preset("full8").replace(k_a=4).replace(mode="native")
+    assert c2.a == QuantSpec("scaled", 4) and c2.k_a == 4
+    from repro.core import QConfig
+    c3 = QConfig(k_w=6)
+    assert c3.w == QuantSpec("clip", 6)
+
+
+def test_momentum_pluggable_gradient_quantizer(x):
+    """cfg.g resolves through the registry for ANY registered kind; the dr
+    schedule/stochastic knobs are injected only where the quantizer has
+    those fields."""
+    from repro.optim.momentum import _grad_quantizer
+    q = _grad_quantizer(preset("full8").replace(g=QuantSpec("direct", 15)), 8)
+    np.testing.assert_array_equal(np.asarray(q(x * 0.25)),
+                                  np.asarray(qf.q_direct(x * 0.25, 15)))
+    qc = _grad_quantizer(preset("full8"), 6)
+    assert qc.dr_bits == 6 and qc.stochastic
+    # explicit spec params are authoritative over the legacy knobs/schedule
+    pinned = preset("full8").replace(
+        g=QuantSpec("cq", 15, (("stochastic", False), ("dr_bits", 4))))
+    qp = _grad_quantizer(pinned, 8)
+    assert not qp.stochastic and qp.dr_bits == 4
+
+
+def test_qconfig_alias_pins_width_over_stale_field():
+    """A width-suffixed alias is authoritative even when a wider legacy
+    width field is carried along: 'flag8' must stay flag@8."""
+    from repro.core import QConfig
+    c = preset("e2_16").replace(e2_kind="flag8")
+    assert c.e2 == QuantSpec("flag", 8) and c.k_e2 == 8
+    c2 = QConfig(e2_kind="flag8", k_e2=16)
+    assert c2.e2 == QuantSpec("flag", 8) and c2.k_e2 == 8
+
+
+def test_qconfig_width_only_construction_survives_replace():
+    """QConfig(k_e2=16) re-widths the default spec AND keeps a canonical
+    alias consistent with the FINAL spec, so later replace() round-trips."""
+    from repro.core import QConfig
+    c = QConfig(k_e2=16)
+    assert c.e2 == QuantSpec("flag", 16)
+    c2 = c.replace(mode="native")
+    assert c2.e2 == QuantSpec("flag", 16) and c2.k_e2 == 16
+
+
+def test_requantize_saturates_to_target_width(x):
+    """Writing a 16-bit payload into the int8 KV cache saturates instead of
+    wrapping on the dtype cast."""
+    from repro.models.layers import kv_quantize
+    qt = get_quantizer("sq", 16).quantize(x * 10.0)   # int16 payload
+    out = kv_quantize(qt, jnp.float32(2.0 ** -7))
+    assert out.dtype == jnp.int8
+    assert int(jnp.max(out)) <= 127 and int(jnp.min(out)) >= -127
+    # and it agrees with the legacy array path on the same values
+    legacy = kv_quantize(qt.dequantize(), jnp.float32(2.0 ** -7))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(legacy))
+
+
+def test_explicit_none_error_kind_stays_16bit(x):
+    """'none' means NO error quantization — whether passed as the qeinsum
+    e_kind, configured as the e2 spec, or via the quant_e2 switch — and the
+    native backward falls back to the lossless 16-bit grid decomposition,
+    never a k_e2-wide one."""
+    from repro.core.qdense import _error_quantizer
+    cfg = preset("full8", "native")
+    for q in (_error_quantizer(cfg, "none"),
+              _error_quantizer(cfg.replace(e2_kind="none"), "default"),
+              _error_quantizer(cfg.replace(quant_e2=False), "default")):
+        assert q.quantize(x).data.dtype == jnp.int16
+        np.testing.assert_array_equal(np.asarray(q(x)), np.asarray(x))
+
+
+def test_register_override_takes_effect_immediately(x):
+    """Re-registering a name invalidates cached instances, so plugins can
+    override builtin kinds even after presets warmed the cache."""
+    import dataclasses
+    from repro.core.qtensor import ShiftQuantizer, _REGISTRY
+    from repro.core import register_quantizer
+    get_quantizer("sq", 8)(x)                  # warm the cache
+
+    @dataclasses.dataclass(frozen=True)
+    class NegSQ(ShiftQuantizer):
+        name = "sq"
+
+        def __call__(self, t, *, key=None):
+            return -qf.sq(t, self.k)
+
+    orig = _REGISTRY["sq"]
+    register_quantizer("sq", NegSQ)
+    try:
+        np.testing.assert_array_equal(np.asarray(get_quantizer("sq", 8)(x)),
+                                      np.asarray(-qf.sq(x, 8)))
+    finally:
+        register_quantizer("sq", orig)
+
+
+def test_custom_quantizer_registration(x):
+    """Third-party quantizers plug in without touching core dispatch."""
+    import dataclasses
+    from repro.core.qtensor import ShiftQuantizer, register_quantizer, \
+        _REGISTRY
+
+    @dataclasses.dataclass(frozen=True)
+    class DoubleShift(ShiftQuantizer):
+        name = "sq_double"
+
+        def __call__(self, t, *, key=None):
+            return qf.sq(t, self.k) * 1.0  # same math, distinct identity
+
+    register_quantizer("sq_double", DoubleShift)
+    try:
+        assert "sq_double" in registered_quantizers()
+        q = get_quantizer("sq_double", 8)
+        np.testing.assert_array_equal(np.asarray(q(x)),
+                                      np.asarray(qf.sq(x, 8)))
+    finally:
+        del _REGISTRY["sq_double"]
+        get_quantizer.cache_clear()
+
+
+# --------------------------------------------------------------------------
+# pytree transparency: jit / grad / scan
+# --------------------------------------------------------------------------
+
+
+def test_qtensor_survives_jit(x):
+    q = get_quantizer("scaled", 8)
+
+    @jax.jit
+    def f(t):
+        qt = q.quantize(t)
+        return qt, qt.dequantize()
+
+    qt, y = f(x)
+    assert isinstance(qt, QTensor) and qt.data.dtype == jnp.int8 and qt.k == 8
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(qf.q_scaled(x, 8)))
+
+
+def test_qtensor_survives_grad(x):
+    """quantize_ste: QTensor-valued output, straight-through gradient."""
+    q = get_quantizer("clip", 8)
+
+    def f(t):
+        qt = quantize_ste(q, t)
+        return jnp.sum(qt.to_array() ** 2)
+
+    g = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(2.0 * qf.q_clip(x, 8)), rtol=1e-6)
+
+
+def test_qtensor_survives_scan(x):
+    q = get_quantizer("clip", 8)
+    qt = q.quantize(x)
+
+    def body(c, _):
+        return c + 1, qt
+
+    n, stacked = jax.lax.scan(body, 0, None, length=3)
+    assert isinstance(stacked, QTensor)
+    assert stacked.data.shape == (3,) + x.shape and stacked.k == 8
+    np.testing.assert_array_equal(
+        np.asarray(stacked.data[0].astype(jnp.float32) * stacked.scale[0]),
+        np.asarray(qt.dequantize()))
+
+
+def test_qtensor_array_surface(x):
+    qt = get_quantizer("scaled", 8).quantize(x)
+    assert qt.shape == x.shape and qt.ndim == x.ndim
+    assert qt.reshape(-1).shape == (x.size,)
+    assert qt.transpose(1, 0).shape == x.shape[::-1]
+    assert qt[0].shape == x.shape[1:]
+    # arithmetic degrades to the fp32 value
+    np.testing.assert_allclose(np.asarray(qt * 2.0),
+                               np.asarray(qt.dequantize() * 2.0))
+    np.testing.assert_allclose(np.asarray(jnp.ones_like(x) + qt),
+                               np.asarray(1.0 + qt.dequantize()))
+
+
+# --------------------------------------------------------------------------
+# acceptance: zero redundant decompositions on pre-quantized operands
+# --------------------------------------------------------------------------
+
+
+def _count_amax_ops(jaxpr) -> int:
+    return str(jaxpr).count("reduce_max")
+
+
+def test_native_qeinsum_no_amax_on_qtensor_operands():
+    """Forward native qeinsum with QTensor W and A operands must contain NO
+    amax pass (reduce_max) anywhere in its jaxpr — payloads are consumed
+    as-is.  The seed implementation re-derived both payloads per call."""
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    xq = cfg.a.make().quantize(x)
+    wq = cfg.w.make().quantize(w)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: qeinsum(cfg, "mk,kn->mn", "default", True, a, b))(xq, wq)
+    assert _count_amax_ops(jaxpr) == 0, jaxpr
+
+
+def test_native_fwd_bwd_single_amax_total():
+    """Full forward+backward of qdense on a pre-quantized activation: the
+    ONLY amax is the error quantizer's (on the fresh cotangent).  Weights
+    quantize through the fixed-scale clip quantizer (amax-free)."""
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    xq = cfg.a.make().quantize(x)
+
+    def f(data, scale, w):
+        qa = QTensor(data, scale, 8)
+        return jnp.sum(qeinsum(cfg, "mk,kn->mn", "default", True, qa,
+                               qweight(cfg, w)))
+
+    jaxpr = jax.make_jaxpr(jax.grad(f, argnums=2))(xq.data, xq.scale, w)
+    assert _count_amax_ops(jaxpr) == 1, jaxpr
+
+
+def test_native_qact_into_qdense_decomposes_once():
+    """qact -> qdense: exactly one activation amax (inside qact's quantizer)
+    and zero weight amaxes for the whole forward."""
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    jaxpr = jax.make_jaxpr(
+        lambda x, w: qdense(cfg, qact(cfg, "relu", x), w))(x, w)
+    assert _count_amax_ops(jaxpr) == 1, jaxpr
+
+
+def test_native_qtensor_operand_matches_array_operand():
+    """Consuming a pre-quantized QTensor gives the SAME numbers as the
+    legacy re-decomposition of its grid carrier."""
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    xq = cfg.a.make().quantize(x)
+    y_qt = qeinsum(cfg, "mk,kn->mn", "default", True, xq, qweight(cfg, w))
+    y_arr = qeinsum(cfg, "mk,kn->mn", "default", True, xq.dequantize(),
+                    qweight(cfg, w))
+    np.testing.assert_array_equal(np.asarray(y_qt), np.asarray(y_arr))
+
+
+def test_frozen_qtensor_gets_no_gradient():
+    """QTensors without a carrier (the int8 KV cache) are consumed but
+    non-differentiable; gradients still flow to the other operand."""
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 8)) * 0.1
+    frozen = cfg.w.make().quantize(w)          # no carrier
+    assert frozen.carrier is None
+
+    def f(x):
+        xq = qact(cfg, "relu", x)
+        return jnp.sum(qeinsum(cfg, "mk,kn->mn", "default", True, xq, frozen))
+
+    g = jax.grad(f)(x)
+    assert g.shape == x.shape and bool(jnp.any(g != 0))
