@@ -22,7 +22,7 @@ def main() -> None:
         os.environ["REPRO_BENCH_FAST"] = "1"
 
     from . import (fig7_distributions, fig8_batchsize, fig9_10_e3,
-                   fig11_cost, roofline_bench, table1_accuracy,
+                   fig11_cost, roofline_bench, serve_bench, table1_accuracy,
                    table2_sensitivity)
     benches = {
         "table1": table1_accuracy.main,
@@ -32,6 +32,7 @@ def main() -> None:
         "fig9_10": fig9_10_e3.main,
         "fig11": fig11_cost.main,
         "roofline": roofline_bench.main,
+        "serve": serve_bench.main,
     }
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     print("name,us_per_call,derived")

@@ -1,0 +1,72 @@
+"""Serving benchmark: continuous-batching engine under open-loop Poisson
+traffic at several arrival rates, vs the sequential naive baseline.
+
+CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
+  serve/rate<r>  — us per fused decode step; decode tok/s, mean/max TTFT,
+                   preemptions under rate r req/s
+  serve/naive    — us per decode step of one-request-at-a-time serving
+  serve/speedup  — engine-vs-naive aggregate decode tok/s ratio
+  serve/pool     — int8-vs-fp32 footprint ratio + resident-seq capacity
+
+Scale knobs: REPRO_BENCH_FAST halves the request count and drops the
+highest rate; the arch is the reduced granite-3-8b (CPU scale).
+"""
+from __future__ import annotations
+
+import os
+
+from .common import emit
+
+
+def main():
+    import jax
+
+    from repro.configs import get
+    from repro.core import preset
+    from repro.models import build_model
+    from repro.serving import Engine, naive_serve, poisson_traffic, run_load
+
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    n_requests = 6 if fast else 12
+    rates = (4.0, 16.0) if fast else (4.0, 16.0, 64.0)
+    gen_lens = (4, 8) if fast else (4, 8, 12)
+
+    model = build_model(get("granite-3-8b").reduced(),
+                        preset("full8", "native"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def traffic_at(rate):
+        return poisson_traffic(rate=rate, n_requests=n_requests,
+                               prompt_lens=(8, 16, 24), gen_lens=gen_lens,
+                               vocab=128, seed=7)
+
+    engine_tokps = 0.0
+    pool_rep = None
+    for rate in rates:
+        engine = Engine(model, params, max_lanes=4, page_size=8, max_ctx=48)
+        _, m = run_load(engine, traffic_at(rate))
+        us = (m["decode_wall_s"] / max(1, m["decode_steps"])) * 1e6
+        emit(f"serve/rate{rate:g}", us,
+             f"tokps={m['decode_tok_s']:.2f};"
+             f"ttft_ms_mean={m['ttft_mean_s'] * 1e3:.1f};"
+             f"ttft_ms_max={m['ttft_max_s'] * 1e3:.1f};"
+             f"steps={m['decode_steps']};preempt={m['preemptions']};"
+             f"straggler={m['straggler_steps']}")
+        engine_tokps = max(engine_tokps, m["decode_tok_s"])
+        pool_rep = m.get("pool", pool_rep)
+
+    _, nm = naive_serve(model, params, traffic_at(rates[0]))
+    n_us = (nm["decode_wall_s"] / max(1, nm["decode_steps"])) * 1e6
+    emit("serve/naive", n_us,
+         f"tokps={nm['decode_tok_s']:.2f};steps={nm['decode_steps']}")
+    emit("serve/speedup", 0.0,
+         f"engine_vs_naive={engine_tokps / max(nm['decode_tok_s'], 1e-9):.2f}x")
+    if pool_rep is not None:
+        emit("serve/pool", 0.0,
+             f"int8_vs_fp32={pool_rep['footprint_ratio']:.2f}x;"
+             f"seqs_int8={pool_rep['capacity_seqs_int8']};"
+             f"seqs_fp32={pool_rep['capacity_seqs_fp32']}")
+
+
+if __name__ == "__main__":
+    main()

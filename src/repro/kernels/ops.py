@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .page_gather import page_gather
 from .qmatmul import qmatmul
 from .quantize import cq_stochastic, quantize_fused
 from .selective_scan import selective_scan
@@ -42,6 +43,22 @@ def cq_op(x, bits, inv_step, dr=128.0, *, force_kernel=False):
     if force_kernel:
         return cq_stochastic(x, bits, inv_step, dr=dr, interpret=True)
     return ref.cq_stochastic_ref(x, bits, inv_step, dr)
+
+
+def page_gather_op(pages, table, *, force_kernel=False):
+    """pages: (P, page, *rest) + table: (B, NB) -> (B, NB, page, *rest).
+
+    The serving engine's paged-KV gather: physical int8 pages named by a
+    per-lane page table become a contiguous per-lane view.  Trailing dims
+    are flattened for the kernel and restored on the way out.
+    """
+    rest = pages.shape[2:]
+    if _on_tpu() or force_kernel:
+        p, page = pages.shape[:2]
+        flat = pages.reshape(p, page, -1)
+        out = page_gather(flat, table, interpret=not _on_tpu())
+        return out.reshape(table.shape + (page,) + rest)
+    return ref.page_gather_ref(pages, table)
 
 
 def selective_scan_op(a, b, c, *, force_kernel=False):

@@ -29,6 +29,14 @@ def cq_stochastic_ref(x: jax.Array, bits: jax.Array, inv_step: jax.Array,
     return jnp.clip(y, -dr + 1.0, dr - 1.0).astype(jnp.int16)
 
 
+def page_gather_ref(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """Paged KV gather: pages (P, page, ...) + table (B, NB) -> the
+    contiguous per-lane view (B, NB, page, ...), all int8 (no dequantize).
+    Out-of-range ids clamp (id 0 is the trash page dead lanes point at)."""
+    p = pages.shape[0]
+    return pages[jnp.clip(table, 0, p - 1)]
+
+
 def selective_scan_ref(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
     """h_t = a_t * h_{t-1} + b_t (h_0 = 0);  y_t = sum_n c_t[n] * h_t[:, n].
 

@@ -47,16 +47,27 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
         kh = jax.vmap(lambda xi, pi: L.rope(xi, pi[None], acfg.rope_theta))(
             kh, pvec)
         qh, kh, vh = (qact(cfg, "none", t) for t in (qh, kh, vh))
-        k8, v8 = cache["k"], cache["v"]
         ks, vs = cache["k_scale"], cache["v_scale"]
-        bidx = jnp.arange(b)
-        k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
-        v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
-        # the int8 cache IS the matmul operand: no dequantize round trip
-        o = L.decode_attention(cfg, qh, L.kv_qtensor(k8, ks),
-                               L.kv_qtensor(v8, vs), q_pos=pvec,
-                               t_valid=pvec.max() + 1)
-        new_cache = (k8, v8)
+        if "k_pages" in cache:  # paged serving cache (this group's pages)
+            kp, vp = cache["k_pages"], cache["v_pages"]
+            table = cache["table"]
+            kp = L.page_scatter_token(kp, table, pvec,
+                                      L.kv_quantize(kh[:, 0], ks))
+            vp = L.page_scatter_token(vp, table, pvec,
+                                      L.kv_quantize(vh[:, 0], vs))
+            o = L.paged_decode_attention(cfg, qh, kp, vp, table, ks, vs,
+                                         q_pos=pvec, t_valid=pvec.max() + 1)
+            new_cache = (kp, vp)
+        else:
+            k8, v8 = cache["k"], cache["v"]
+            bidx = jnp.arange(b)
+            k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
+            v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
+            # the int8 cache IS the matmul operand: no dequantize round trip
+            o = L.decode_attention(cfg, qh, L.kv_qtensor(k8, ks),
+                                   L.kv_qtensor(v8, vs), q_pos=pvec,
+                                   t_valid=pvec.max() + 1)
+            new_cache = (k8, v8)
     x = x + qdense(cfg, o.reshape(b, s, -1), p["wo"])
     h2 = qact(cfg, "none", qrmsnorm(cfg, x, p["ln2"]))
     x = x + L.swiglu(cfg, h2, p["w_gate"], p["w_up"], p["w_down"], acfg.act)
@@ -174,11 +185,19 @@ class Zamba2:
             return x, (g_states, g_kv, t_states)
 
         # decode
+        paged = "k_pages" in cache
+
         def gbody(h, xs):
             gp, st_c, st_h, ck, cv = xs
             h, (nc, nh) = mamba_scan(h, gp, {"conv": st_c, "h": st_h})
-            lc = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
-                  "v_scale": cache["v_scale"][0]}
+            if paged:
+                lc = {"k_pages": ck, "v_pages": cv,
+                      "k_scale": cache["k_scale"][0],
+                      "v_scale": cache["v_scale"][0],
+                      "table": cache["table"]}
+            else:
+                lc = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
+                      "v_scale": cache["v_scale"][0]}
             h, (nk, nv) = _attn_shared(q, a, shared, h, pos, "decode", lc)
             return h, (nc, nh, nk, nv)
 
@@ -186,8 +205,10 @@ class Zamba2:
         mc = cache["m_conv"][: g * ae].reshape((g, ae) +
                                                cache["m_conv"].shape[1:])
         mh = cache["m_h"][: g * ae].reshape((g, ae) + cache["m_h"].shape[1:])
+        kv_xs = ((cache["k_pages"], cache["v_pages"]) if paged
+                 else (cache["k"], cache["v"]))
         x, (nc, nh, nk, nv) = L.lscan(
-            a, gbody, x, (head, mc, mh, cache["k"], cache["v"]))
+            a, gbody, x, (head, mc, mh) + kv_xs)
         nc = nc.reshape((-1,) + nc.shape[2:])
         nh = nh.reshape((-1,) + nh.shape[2:])
         if self.tail:
@@ -201,8 +222,12 @@ class Zamba2:
                               cache["m_h"][g * ae:]))
             nc = jnp.concatenate([nc, tc], 0)
             nh = jnp.concatenate([nh, th], 0)
-        new_cache = dict(cache, m_conv=nc, m_h=nh, k=nk, v=nv,
-                         pos=cache["pos"] + 1)
+        if paged:
+            new_cache = dict(cache, m_conv=nc, m_h=nh, k_pages=nk,
+                             v_pages=nv, pos=cache["pos"] + 1)
+        else:
+            new_cache = dict(cache, m_conv=nc, m_h=nh, k=nk, v=nv,
+                             pos=cache["pos"] + 1)
         return x, new_cache
 
     def _logits(self, params, x):
@@ -265,6 +290,46 @@ class Zamba2:
         x = params["embed"][tokens][:, None, :]
         x, cache = self._backbone(params, x, cache["pos"], "decode", cache)
         return cache, self._logits(params, x)[:, 0]
+
+    # ---------------- serving decode-state slot API ----------------
+    # Hybrid lanes split across both stores: the mamba recurrent state sits
+    # in dense per-lane slots, the shared-attention KV in paged pool pages
+    # (one logical page spans all n_groups applications of the block).
+
+    def decode_state_spec(self):
+        a = self.a
+        return {"kv_layers": self.n_groups, "n_kv": a.n_kv, "dh": a.dh,
+                "dense_axes": {"m_conv": 1, "m_h": 1, "pos": 0}}
+
+    def init_slots(self, n_lanes: int):
+        a = self.a
+        di, n = a.d_inner, a.ssm_state
+        hm = di // a.headdim
+        return {
+            "m_conv": jnp.zeros((a.n_layers, n_lanes, a.d_conv - 1, di),
+                                jnp.float32),
+            "m_h": jnp.zeros((a.n_layers, n_lanes, hm, n, a.headdim),
+                             jnp.float32),
+            "pos": jnp.zeros((n_lanes,), jnp.int32),
+        }
+
+    def slot_from_cache(self, cache, b: int = 0):
+        return ({"m_conv": cache["m_conv"][:, b], "m_h": cache["m_h"][:, b],
+                 "pos": cache["pos"][b]},
+                (cache["k"][:, b], cache["v"][:, b]))
+
+    def paged_decode_step(self, params, slots, pool_view, tokens):
+        """One fused decode step over all lanes: mamba states advance in the
+        dense slots, the shared-attention KV reads/writes pool pages.
+        Positions advance in the engine (dead lanes must not move)."""
+        cache = dict(pool_view, m_conv=slots["m_conv"], m_h=slots["m_h"],
+                     pos=slots["pos"])
+        x = params["embed"][tokens][:, None, :]
+        x, nc = self._backbone(params, x, slots["pos"], "decode", cache)
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"m_conv": nc["m_conv"], "m_h": nc["m_h"],
+                        "pos": slots["pos"]}, \
+            {"k_pages": nc["k_pages"], "v_pages": nc["v_pages"]}
 
     def batch_pspec(self):
         return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}

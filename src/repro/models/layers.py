@@ -200,6 +200,28 @@ def decode_attention(cfg: QConfig, q, k, v, *,
     return qact(cfg, "none", out)
 
 
+def paged_decode_attention(cfg: QConfig, q, k_pages, v_pages, table, k_scale,
+                           v_scale, *, q_pos: Array, t_valid: Array) -> Array:
+    """Single-step attention against a PAGED int8 KV cache (one layer).
+
+    k_pages/v_pages: (P, page, KV, dh) int8 physical pages; table: (B, NB)
+    per-lane page table (logical block -> physical page id, 0 = trash page).
+    The gather stays int8 end to end: pages become a contiguous per-lane
+    payload view that feeds the integer dots as QTensors — the paged cache
+    is never dequantized or concatenated in fp32.
+    """
+    from repro.kernels.ops import page_gather_op
+    page = k_pages.shape[1]
+    b, nb = table.shape
+    k8 = page_gather_op(k_pages, table).reshape(
+        b, nb * page, *k_pages.shape[2:])
+    v8 = page_gather_op(v_pages, table).reshape(
+        b, nb * page, *v_pages.shape[2:])
+    return decode_attention(cfg, q, kv_qtensor(k8, k_scale),
+                            kv_qtensor(v8, v_scale), q_pos=q_pos,
+                            t_valid=t_valid)
+
+
 # --------------------------------------------------------------------------
 # int8 KV cache
 # --------------------------------------------------------------------------
@@ -233,6 +255,21 @@ def kv_quantize(x, step):
 def kv_qtensor(x8: Array, step: Array) -> QTensor:
     """Wrap a cache slice as a (non-differentiable) QTensor."""
     return QTensor(x8, step, 8)
+
+
+def page_scatter_token(pages: Array, table: Array, pos: Array,
+                       tok: Array) -> Array:
+    """Write one decode step's quantized KV token into its page slot.
+
+    pages: (P, page, KV, dh) int8; table: (B, NB); pos: (B,) the position
+    being written; tok: (B, KV, dh) int8.  Lane b lands in
+    pages[table[b, pos//page], pos%page].  Dead lanes' table rows are all 0,
+    so their writes collide harmlessly on the trash page.
+    """
+    page = pages.shape[1]
+    blk, off = pos // page, pos % page
+    pid = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
+    return pages.at[pid, off].set(tok)
 
 
 def kv_dequantize(x8: Array, step: Array) -> Array:

@@ -49,12 +49,22 @@ def moe_pspecs(dp, tp):
             "wu": P(tp, None, None), "wd": P(tp, None, None)}
 
 
-def _moe_local(cfg: QConfig, acfg, x, rw, wg, wu, wd, e_off):
-    """Per-device MoE on local tokens x:(T,D) with local experts."""
+def _moe_local(cfg: QConfig, acfg, x, rw, wg, wu, wd, e_off,
+               dropless: bool = False):
+    """Per-device MoE on local tokens x:(T,D) with local experts.
+
+    `dropless` sizes capacity to worst case (cap = T*k).  Decode uses it:
+    a one-token-per-lane batch is tiny, and under the serving engine's
+    padded lane batches a capacity drop would let DEAD lanes displace live
+    tokens from expert slots — routing must not depend on lane padding.
+    """
     t, d = x.shape
     e, k = acfg.moe_experts, acfg.moe_topk
     el = wg.shape[0]
-    cap = max(1, int(math.ceil(t * k / e * acfg.capacity_factor)))
+    if dropless:
+        cap = t * k
+    else:
+        cap = max(1, int(math.ceil(t * k / e * acfg.capacity_factor)))
 
     logits = x @ rw                                     # router (exempt fp32)
     vals, idx = lax.top_k(logits, k)                    # (T, k)
@@ -107,16 +117,18 @@ def moe_ffn(cfg: QConfig, acfg, x, p, mesh=None, dp_axes=("data",),
     b, s, d = x.shape
     x2 = x.reshape(b * s, d)
 
+    dropless = s == 1                   # decode: see _moe_local docstring
     if mesh is None or tp_axis not in mesh.axis_names:
         y = _moe_local(cfg, acfg, x2, p["router"], p["wg"], p["wu"], p["wd"],
-                       e_off=0)
+                       e_off=0, dropless=dropless)
         return y.reshape(b, s, d)
 
     el = acfg.moe_experts // mesh.shape[tp_axis]
 
     def f(x2, rw, wg, wu, wd):
         e_off = lax.axis_index(tp_axis) * el
-        y = _moe_local(cfg, acfg, x2, rw, wg, wu, wd, e_off)
+        y = _moe_local(cfg, acfg, x2, rw, wg, wu, wd, e_off,
+                       dropless=dropless)
         return lax.psum(y, tp_axis)
 
     fn = _shard_map(

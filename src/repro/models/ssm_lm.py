@@ -97,6 +97,30 @@ class SSMLM:
         x, state = self._backbone(params, x, "decode", state)
         return state, self._logits(params, x)[:, 0]
 
+    # ---------------- serving decode-state slot API ----------------
+    # SSM decode state is O(1) per lane, so there is no paged KV: the whole
+    # state sits in dense per-lane slots behind the same engine interface.
+
+    def decode_state_spec(self):
+        return {"kv_layers": 0, "n_kv": 0, "dh": 0,
+                "dense_axes": {"conv": 1, "h": 1, "pos": 0}}
+
+    def init_slots(self, n_lanes: int):
+        return self.init_state(n_lanes)
+
+    def slot_from_cache(self, state, b: int = 0):
+        return ({"conv": state["conv"][:, b], "h": state["h"][:, b],
+                 "pos": state["pos"][b]}, None)
+
+    def paged_decode_step(self, params, slots, pool_view, tokens):
+        """One fused decode step over all lanes (pool_view unused: the SSM
+        recurrent state IS the cache).  Positions advance in the engine."""
+        del pool_view
+        state = {"conv": slots["conv"], "h": slots["h"], "pos": slots["pos"]}
+        state, logits = self.serve_step(params, state, tokens)
+        return logits, {"conv": state["conv"], "h": state["h"],
+                        "pos": slots["pos"]}, {}
+
     def batch_pspec(self):
         return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}
 

@@ -120,16 +120,28 @@ class LMTransformer:
             qh = _rope_batched(qh, pvec, a.rope_theta)
             kh = _rope_batched(kh, pvec, a.rope_theta)
             qh, kh, vh = (qact(q, "none", t) for t in (qh, kh, vh))
-            k8, v8 = cache["k"], cache["v"]        # (B,T,KV,dh) int8
             ks, vs = cache["k_scale"], cache["v_scale"]
-            bidx = jnp.arange(b)
-            k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
-            v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
-            # the int8 cache IS the matmul operand: no dequantize round trip
-            o = L.decode_attention(q, qh, L.kv_qtensor(k8, ks),
-                                   L.kv_qtensor(v8, vs), q_pos=pvec,
-                                   t_valid=pvec.max() + 1)
-            new_cache = (k8, v8)
+            if "k_pages" in cache:  # paged serving cache (one layer's pages)
+                kp, vp = cache["k_pages"], cache["v_pages"]
+                table = cache["table"]
+                kp = L.page_scatter_token(kp, table, pvec,
+                                          L.kv_quantize(kh[:, 0], ks))
+                vp = L.page_scatter_token(vp, table, pvec,
+                                          L.kv_quantize(vh[:, 0], vs))
+                o = L.paged_decode_attention(q, qh, kp, vp, table, ks, vs,
+                                             q_pos=pvec,
+                                             t_valid=pvec.max() + 1)
+                new_cache = (kp, vp)
+            else:
+                k8, v8 = cache["k"], cache["v"]    # (B,T,KV,dh) int8
+                bidx = jnp.arange(b)
+                k8 = k8.at[bidx, pvec].set(L.kv_quantize(kh[:, 0], ks))
+                v8 = v8.at[bidx, pvec].set(L.kv_quantize(vh[:, 0], vs))
+                # the int8 cache IS the matmul operand: no dequantize trip
+                o = L.decode_attention(q, qh, L.kv_qtensor(k8, ks),
+                                       L.kv_qtensor(v8, vs), q_pos=pvec,
+                                       t_valid=pvec.max() + 1)
+                new_cache = (k8, v8)
         o = o.reshape(b, s, a.n_heads * a.dh)
         return x + qdense(q, o, p["wo"]), new_cache
 
@@ -160,6 +172,21 @@ class LMTransformer:
             body = L.maybe_remat(self.a, body)
             x, caches = L.lscan(self.a, body, x, params["layers"])
             return x, caches
+
+        if "k_pages" in cache:   # paged decode: per-layer page pools
+            def body(h, xs):
+                lp, kp, vp = xs
+                layer_cache = {"k_pages": kp, "v_pages": vp,
+                               "k_scale": cache["k_scale"][0],
+                               "v_scale": cache["v_scale"][0],
+                               "table": cache["table"]}
+                h2, (nkp, nvp) = self._block(lp, h, pos, mode, layer_cache)
+                return h2, (nkp, nvp)
+            x, (nk, nv) = L.lscan(self.a, body, x,
+                                  (params["layers"], cache["k_pages"],
+                                   cache["v_pages"]))
+            return x, dict(cache, k_pages=nk, v_pages=nv,
+                           pos=cache["pos"] + 1)
 
         def body(h, xs):
             lp, ck, cv = xs
@@ -221,6 +248,40 @@ class LMTransformer:
         x, cache = self._backbone(params, x, pos, "decode", cache)
         logits = self._logits(params, x)
         return cache, logits[:, 0]
+
+    # ---------------- serving decode-state slot API ----------------
+    # Uniform interface the continuous-batching engine drives: attention KV
+    # lives in the engine's paged pool, recurrent state (none here) in dense
+    # per-lane slots.  See serving/engine.py and DESIGN.md §7.
+
+    def decode_state_spec(self):
+        a = self.a
+        return {"kv_layers": a.n_layers, "n_kv": a.n_kv, "dh": a.dh,
+                "dense_axes": {"pos": 0}}
+
+    def init_slots(self, n_lanes: int):
+        return {"pos": jnp.zeros((n_lanes,), jnp.int32)}
+
+    def slot_from_cache(self, cache, b: int = 0):
+        """Sequence `b` of a prefill cache -> (dense slot values, (k, v)
+        paged payloads of shape (L, T, KV, dh) int8)."""
+        return ({"pos": cache["pos"][b]},
+                (cache["k"][:, b], cache["v"][:, b]))
+
+    def paged_decode_step(self, params, slots, pool_view, tokens):
+        """One fused decode step over all lanes against the paged pool.
+
+        pool_view: {"k_pages"/"v_pages": (L, P, page, KV, dh) int8,
+        "k_scale"/"v_scale": (L,), "table": (B, NB)}.  Returns
+        (logits, new_slots, new pool payloads).  Lane positions advance in
+        the engine (dead lanes must not move), so `slots` pass through.
+        """
+        cache = dict(pool_view, pos=slots["pos"])
+        x = params["embed"][tokens][:, None, :]
+        x, nc = self._backbone(params, x, slots["pos"], "decode", cache)
+        logits = self._logits(params, x)[:, 0]
+        return logits, slots, {"k_pages": nc["k_pages"],
+                               "v_pages": nc["v_pages"]}
 
     # ---------------- dry-run plumbing ----------------
 

@@ -4,7 +4,10 @@ Single-process realization of the multi-pod control plane (DESIGN.md §5):
   * StepWatchdog — tracks per-step wall times; flags stragglers by a
     deadline policy (median * factor).  On a real pod the flagged worker is
     evicted and its data shard reassigned (the deterministic data pipeline
-    makes reassignment trivial — see data/synthetic.py).
+    makes reassignment trivial — see data/synthetic.py).  The serving
+    engine times every fused decode step through the same watchdog:
+    flagged steps log here and surface as `straggler_steps` in
+    `serving.Engine.metrics()` (DESIGN.md §7).
   * TrainRunner — wraps the jitted step in a crash/restart loop: on ANY
     exception it restores the latest checkpoint and continues.  Combined
     with deterministic data + stochastic-rounding keys derived from the step

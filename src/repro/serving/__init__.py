@@ -1,0 +1,21 @@
+"""Continuous-batching int8 serving engine over a paged QTensor KV pool.
+
+Layout (DESIGN.md §7):
+  pool.py      — PagePool: int8 QTensor pages + free-list allocator + the
+                 int8-vs-fp32 byte accounting
+  scheduler.py — request lifecycle (QUEUED->PREFILL->DECODE->DONE),
+                 admission control, recompute preemption
+  engine.py    — Engine: fused jit decode over padded lanes, sampling,
+                 per-request metrics, StepWatchdog wiring
+  api.py       — make_engine + poisson_traffic/run_load/naive_serve
+"""
+from .engine import Engine, greedy_token, make_sampler
+from .pool import PagePool
+from .scheduler import Request, RequestState, Scheduler
+from .api import make_engine, naive_serve, poisson_traffic, run_load
+
+__all__ = [
+    "Engine", "greedy_token", "make_sampler", "PagePool", "Request",
+    "RequestState", "Scheduler", "make_engine", "naive_serve",
+    "poisson_traffic", "run_load",
+]

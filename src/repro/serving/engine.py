@@ -1,0 +1,344 @@
+"""Continuous-batching int8 serving engine.
+
+One `Engine` drives one model family through the uniform decode-state slot
+API (`decode_state_spec` / `init_slots` / `slot_from_cache` /
+`paged_decode_step`): attention KV lives as int8 QTensor pages in a
+`PagePool`, recurrent SSM state in dense per-lane slots — both behind the
+same fused, jit-stable decode step over a padded batch of `max_lanes` lanes.
+
+Control plane (host, numpy): `Scheduler` admission/preemption, per-lane
+page tables, request bookkeeping.  Data plane (device, one trace): page
+gather -> decode attention on int8 payloads -> token write-back into pages
+-> sampling.  Dead lanes ride along masked (their table rows point at the
+trash page and their positions never advance).
+
+Per-step flow (Engine.step):
+  1. admit + prefill new requests into free lanes (inflight batching: they
+     join this very step's decode batch)
+  2. allocate decode pages at page boundaries; preempt the longest-context
+     request when the pool is exhausted (recompute preemption)
+  3. one fused decode step over all lanes; append sampled tokens
+  4. retire finished requests, free their pages
+
+A `StepWatchdog` (runtime/fault.py) times every fused decode step; flagged
+stragglers are logged and surface in `metrics()["straggler_steps"]`.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault import StepWatchdog
+
+from .pool import PagePool
+from .scheduler import Request, RequestState, Scheduler
+
+
+def greedy_token(logits, vocab: int):
+    """argmax over the unpadded vocab — THE greedy sampling primitive (the
+    serve example / engine / naive baselines all share this slice)."""
+    return jnp.argmax(logits[..., :vocab], axis=-1).astype(jnp.int32)
+
+
+def make_sampler(vocab: int, temperature: float = 0.0, top_k: int = 0):
+    """(logits (B, Vp), key) -> (B,) int32 token ids.
+
+    temperature <= 0 is greedy (key ignored); otherwise softmax sampling at
+    `temperature`, optionally restricted to the top-k logits.
+    """
+    if temperature <= 0.0:
+        return lambda logits, key: greedy_token(logits, vocab)
+
+    def sampler(logits, key):
+        lg = logits[..., :vocab] / temperature
+        if top_k:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -jnp.inf, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return sampler
+
+
+class Engine:
+    """Continuous-batching serving engine over the paged QTensor KV pool."""
+
+    def __init__(self, model, params, *, max_lanes: int = 4,
+                 page_size: int = 8, n_pages: int | None = None,
+                 max_ctx: int = 64, temperature: float = 0.0,
+                 top_k: int = 0, seed: int = 0,
+                 watchdog: StepWatchdog | None = None, clock=time.monotonic):
+        from repro.launch.train import make_paged_decode_step
+
+        self.model, self.params = model, params
+        self.clock = clock
+        if not hasattr(model, "decode_state_spec"):
+            raise ValueError(
+                f"family {model.a.family!r} has no decode-state slot API "
+                "(servable: lm / vlm / moe / ssm / hybrid)")
+        spec = model.decode_state_spec()
+        self.paged = spec["kv_layers"] > 0
+        self.page_size = page_size
+        self.max_ctx = max_ctx
+        self.n_blocks = -(-max_ctx // page_size)
+
+        self.pool = None
+        if self.paged:
+            if n_pages is None:
+                n_pages = 1 + max_lanes * self.n_blocks
+            self.pool = PagePool(n_pages, page_size, spec["kv_layers"],
+                                 spec["n_kv"], spec["dh"])
+            if self.pool.usable < self.n_blocks:
+                raise ValueError(
+                    f"pool of {n_pages} pages cannot hold one max_ctx="
+                    f"{max_ctx} request ({self.n_blocks} pages needed)")
+        self.scheduler = Scheduler(self.pool)
+        self.watchdog = watchdog or StepWatchdog()
+
+        self.max_lanes = max_lanes
+        self.lane_req: list[Request | None] = [None] * max_lanes
+        self.table = np.zeros((max_lanes, self.n_blocks), np.int32)
+        self.h_tokens = np.zeros((max_lanes,), np.int32)
+        self.slots = model.init_slots(max_lanes)
+        self._dense_axes = spec["dense_axes"]
+
+        self.key = jax.random.PRNGKey(seed)
+        self._sample_ctr = 0
+        sampler = make_sampler(model.a.vocab, temperature, top_k)
+        self._sample_jit = jax.jit(sampler)
+        scales = ((self.pool.k_scale, self.pool.v_scale)
+                  if self.paged else (None, None))
+        self._decode_jit = jax.jit(
+            make_paged_decode_step(model, sampler, *scales),
+            donate_argnums=(1, 2, 3))
+        if self.paged:
+            prefill = lambda p, t, n: model.prefill(p, t, n)  # noqa: E731
+        else:
+            prefill = lambda p, t, n: model.prefill(p, t)     # noqa: E731
+        self._prefill_jit = jax.jit(prefill, static_argnums=(2,))
+
+        # metrics
+        self.engine_steps = 0
+        self.decode_steps = 0
+        self.decode_wall_s = 0.0
+        self.straggler_steps = 0
+
+    # ---- submission ------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, arrival: float | None = None):
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0 or max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        if len(prompt) + max_new > self.max_ctx:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"max_ctx ({self.max_ctx})")
+        req = self.scheduler.submit(
+            prompt, max_new, self.clock() if arrival is None else arrival)
+        return req.rid
+
+    # ---- engine step -----------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One engine step: admit+prefill, ensure pages, fused decode."""
+        finished = []
+        free = [ln for ln, r in enumerate(self.lane_req) if r is None]
+        for req in self.scheduler.admit(len(free)):
+            self._admit(req, free.pop(0))
+            if req.done:                 # max_new == 1: prefill completed it
+                self._release(req)
+                finished.append(req)
+
+        if self.paged:
+            self._ensure_pages()
+
+        live = [ln for ln, r in enumerate(self.lane_req) if r is not None]
+        if live:
+            t0 = time.monotonic()
+            toks = self._decode()
+            dt = time.monotonic() - t0
+            self.decode_wall_s += dt
+            if self.watchdog.observe(self.decode_steps, dt):
+                self.straggler_steps += 1
+            self.decode_steps += 1
+            for ln in live:
+                req = self.lane_req[ln]
+                tok = int(toks[ln])
+                req.generated.append(tok)
+                self.h_tokens[ln] = tok
+                if req.done:
+                    self._release(req)
+                    finished.append(req)
+        self.engine_steps += 1
+        now = self.clock()
+        for req in finished:
+            self.scheduler.finish(req, now)
+        return finished
+
+    def drain(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Step until every submitted request completes; rid -> tokens."""
+        for _ in range(max_steps):
+            if (not self.scheduler.queue
+                    and all(r is None for r in self.lane_req)):
+                break
+            self.step()
+        else:
+            raise RuntimeError(f"drain did not finish in {max_steps} steps")
+        return {r.rid: list(r.generated)
+                for r in self.scheduler.requests.values()
+                if r.state is RequestState.DONE}
+
+    # ---- admission / release / preemption --------------------------------
+
+    def _admit(self, req: Request, lane: int) -> None:
+        s = len(req.prompt)
+        nb = 0
+        if self.paged:
+            nb = self.scheduler.pages_needed(req)  # prompt + 1 decode block
+            req.page_ids = self.pool.alloc(nb, owner=req.rid)
+            assert req.page_ids is not None     # admission checked capacity
+        cache_len = nb * self.page_size
+        cache, logits = self._prefill_jit(
+            self.params, jnp.asarray(req.prompt)[None], cache_len)
+        dense, kv = self.model.slot_from_cache(cache, 0)
+        self.slots = _write_dense(self.slots, self._dense_axes,
+                                  jnp.int32(lane), dense)
+        if self.paged:
+            pids = jnp.asarray(req.page_ids)
+            k_req, v_req = kv                   # (L, nb*page, KV, dh) int8
+            shp = (k_req.shape[0], nb, self.page_size) + k_req.shape[2:]
+            self.pool.k = _scatter_pages(self.pool.k, pids,
+                                         k_req.reshape(shp))
+            self.pool.v = _scatter_pages(self.pool.v, pids,
+                                         v_req.reshape(shp))
+            self.table[lane] = 0
+            self.table[lane, :nb] = req.page_ids
+
+        tok0 = int(self._sample_jit(logits, self._next_key())[0])
+        req.generated.append(tok0)
+        if req.ttft is None:
+            req.ttft = self.clock() - req.arrival
+        req.lane = lane
+        req.state = RequestState.DECODE
+        self.lane_req[lane] = req
+        self.h_tokens[lane] = tok0
+
+    def _release(self, req: Request) -> None:
+        if self.paged and req.page_ids:
+            self.pool.free(req.page_ids)
+        if req.lane >= 0:
+            self.table[req.lane] = 0
+            self.lane_req[req.lane] = None
+        req.page_ids = []
+        req.lane = -1
+
+    def _preempt(self, req: Request) -> None:
+        self._release(req)
+        self.scheduler.preempt(req)
+
+    def _ensure_pages(self) -> None:
+        """Grow page tables at block boundaries; preempt on exhaustion."""
+        for lane in range(self.max_lanes):
+            req = self.lane_req[lane]
+            if req is None:
+                continue
+            blk = req.pos // self.page_size
+            if blk < len(req.page_ids):
+                continue
+            pid = self.pool.alloc(1, owner=req.rid)
+            while pid is None:
+                live = [r for r in self.lane_req if r is not None]
+                victim = self.scheduler.pick_victim(live)
+                self._preempt(victim)
+                if victim is req:
+                    break
+                pid = self.pool.alloc(1, owner=req.rid)
+            if pid is None:          # this lane itself was preempted
+                continue
+            self.table[lane, blk] = pid[0]
+            req.page_ids.extend(pid)
+
+    # ---- fused decode ----------------------------------------------------
+
+    def _decode(self) -> np.ndarray:
+        pos = np.zeros((self.max_lanes,), np.int32)
+        for ln, req in enumerate(self.lane_req):
+            if req is not None:
+                pos[ln] = req.pos
+        slots = dict(self.slots, pos=jnp.asarray(pos))
+        if self.paged:
+            kp, vp = self.pool.k, self.pool.v
+        else:       # distinct dummies: donated args must not alias
+            kp = jnp.zeros((0,), jnp.int8)
+            vp = jnp.zeros((0,), jnp.int8)
+        new_slots, new_k, new_v, toks = self._decode_jit(
+            self.params, slots, kp, vp, jnp.asarray(self.table),
+            jnp.asarray(self.h_tokens), self._next_key())
+        self.slots = new_slots
+        if self.paged:
+            self.pool.k, self.pool.v = new_k, new_v
+        return np.asarray(toks)
+
+    def _next_key(self):
+        self._sample_ctr += 1
+        return jax.random.fold_in(self.key, self._sample_ctr)
+
+    # ---- maintenance / metrics -------------------------------------------
+
+    def defrag(self) -> int:
+        """Compact pool pages; rewrites live page tables.  Returns moves."""
+        if not self.paged:
+            return 0
+        mapping = self.pool.defrag()
+        if mapping:
+            trans = np.arange(self.pool.n_pages)
+            for old, new in mapping.items():
+                trans[old] = new
+            self.table = trans[self.table].astype(np.int32)
+            for req in self.lane_req:
+                if req is not None:
+                    req.page_ids = [int(trans[p]) for p in req.page_ids]
+        return len(mapping)
+
+    def metrics(self) -> dict:
+        done = [r for r in self.scheduler.requests.values()
+                if r.state is RequestState.DONE]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        gen = sum(len(r.generated) for r in done)
+        out = {
+            "engine_steps": self.engine_steps,
+            "decode_steps": self.decode_steps,
+            "decode_wall_s": self.decode_wall_s,
+            "completed": len(done),
+            "generated_tokens": gen,
+            "queue_depth": self.scheduler.queue_depth,
+            "live_lanes": sum(r is not None for r in self.lane_req),
+            "preemptions": self.scheduler.preemptions,
+            "straggler_steps": self.straggler_steps,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+            "decode_tok_s": (gen / self.decode_wall_s
+                             if self.decode_wall_s > 0 else 0.0),
+        }
+        if self.pool is not None:
+            out["pool"] = self.pool.report(ctx_len=self.max_ctx)
+        return out
+
+
+def _write_dense(slots, axes, lane, vals):
+    """Write one lane's dense decode state (batch axis differs per key)."""
+    out = dict(slots)
+    for name, ax in axes.items():
+        if ax == 0:
+            out[name] = slots[name].at[lane].set(vals[name])
+        else:
+            out[name] = slots[name].at[:, lane].set(vals[name])
+    return out
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_pages(pages, pids, chunk):
+    """pages (L, P, page, KV, dh) <- chunk (L, nb, page, KV, dh) at pids."""
+    return pages.at[:, pids].set(chunk)

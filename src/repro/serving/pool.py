@@ -1,0 +1,141 @@
+"""Paged QTensor KV-cache pool: fixed-size int8 pages + pow2 scales.
+
+The WAGEUBN serving memory model (DESIGN.md §7): all resident KV state is
+int8 payload on a power-of-two grid, cut into fixed-size pages so lanes with
+different context lengths share one physical arena with no per-request
+reservation.  A free-list block allocator hands out logical pages; one
+logical page owns that block's storage across ALL layers, so the device
+arrays are (L, P, page, KV, dh) and the per-layer slice scans cleanly.
+
+Page id 0 is the trash page: dead lanes' page tables point at it, their
+decode writes collide there harmlessly, and the attention mask never reads
+it.  The allocator therefore hands out ids 1..P-1.
+
+Accounting proves the int8 story: `report()` compares the resident int8
+footprint against the fp32 cache the same geometry would need — the ~4x
+byte ratio is exactly ~4x more resident sequences at a fixed HBM budget.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePool:
+    """Physical page arena + free-list allocator + accounting."""
+
+    def __init__(self, n_pages: int, page_size: int, kv_layers: int,
+                 n_kv: int, dh: int, scale: float = 2.0 ** -7):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.kv_layers, self.n_kv, self.dh = kv_layers, n_kv, dh
+        shape = (kv_layers, n_pages, page_size, n_kv, dh)
+        self.k = jnp.zeros(shape, jnp.int8)
+        self.v = jnp.zeros(shape, jnp.int8)
+        self.k_scale = jnp.full((kv_layers,), scale, jnp.float32)
+        self.v_scale = jnp.full((kv_layers,), scale, jnp.float32)
+        # free list (LIFO for reuse locality); id 0 reserved as trash
+        self._free = list(range(n_pages - 1, 0, -1))
+        self._owner: dict[int, object] = {}
+        # accounting
+        self.allocs = 0
+        self.frees = 0
+        self.failed_allocs = 0
+        self.peak_in_use = 0
+        self.defrag_moves = 0
+
+    # ---- allocator -------------------------------------------------------
+
+    @property
+    def usable(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.usable - self.free_count
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def alloc(self, n: int, owner=None) -> list[int] | None:
+        """Pop n pages off the free list, or None (no partial allocation)."""
+        if n > self.free_count:
+            self.failed_allocs += 1
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for pid in ids:
+            self._owner[pid] = owner
+        self.allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def free(self, ids) -> None:
+        for pid in ids:
+            if pid == 0 or pid in self._free:
+                raise ValueError(f"double free / trash free of page {pid}")
+            self._owner.pop(pid, None)
+            self._free.append(pid)
+        self.frees += len(ids)
+
+    # ---- defrag ----------------------------------------------------------
+
+    def defrag(self) -> dict[int, int]:
+        """Compact live pages to the lowest physical ids.
+
+        Payloads move (one gather per arena), owners keep their pages under
+        new ids.  Returns the old->new id mapping so callers rewrite their
+        page tables; identity entries are omitted.
+        """
+        live = sorted(self._owner)
+        mapping = {old: new for new, old in enumerate(live, start=1)
+                   if old != new}
+        if mapping:
+            src = np.arange(self.n_pages)
+            for old, new in mapping.items():
+                src[new] = old
+            src = jnp.asarray(src)
+            self.k = jnp.take(self.k, src, axis=1)
+            self.v = jnp.take(self.v, src, axis=1)
+            self._owner = {mapping.get(p, p): o
+                           for p, o in self._owner.items()}
+            self._free = list(range(self.n_pages - 1, len(live), -1))
+            self.defrag_moves += len(mapping)
+        return mapping
+
+    # ---- byte accounting -------------------------------------------------
+
+    def report(self, ctx_len: int | None = None) -> dict:
+        """int8-vs-fp32 footprint: same geometry, fp32 payloads instead.
+
+        `capacity_seqs_*` counts resident sequences of `ctx_len` tokens that
+        fit in THIS pool's byte budget under each payload dtype — the int8
+        cache's 4x byte saving is 4x more lanes on the same HBM.
+        """
+        page_elems = (self.kv_layers * self.page_size * self.n_kv * self.dh)
+        int8_bytes = 2 * self.n_pages * page_elems          # k + v, 1 B/elem
+        scale_bytes = 2 * self.kv_layers * 4
+        fp32_bytes = 4 * int8_bytes                          # same geometry
+        rep = {
+            "n_pages": self.n_pages, "page_size": self.page_size,
+            "in_use": self.in_use, "free": self.free_count,
+            "peak_in_use": self.peak_in_use,
+            "allocs": self.allocs, "frees": self.frees,
+            "failed_allocs": self.failed_allocs,
+            "defrag_moves": self.defrag_moves,
+            "pool_bytes_int8": int8_bytes + scale_bytes,
+            "pool_bytes_fp32_equiv": fp32_bytes,
+            "footprint_ratio": fp32_bytes / (int8_bytes + scale_bytes),
+        }
+        if ctx_len:
+            per_seq = self.pages_for(ctx_len)
+            budget = int8_bytes + scale_bytes
+            fp32_pages = budget // (4 * 2 * page_elems)
+            rep["capacity_seqs_int8"] = self.usable // per_seq
+            rep["capacity_seqs_fp32"] = max(0, fp32_pages - 1) // per_seq
+        return rep

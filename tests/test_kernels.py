@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.page_gather import page_gather
 from repro.kernels.qmatmul import qmatmul
 from repro.kernels.quantize import cq_stochastic, quantize_fused
 from repro.kernels.selective_scan import selective_scan
@@ -80,6 +81,43 @@ def test_selective_scan_long_dependency():
     want = n * 0.99 ** jnp.arange(s)
     np.testing.assert_allclose(np.asarray(y[0, :, 0]), np.asarray(want),
                                rtol=1e-4)
+
+
+@pytest.mark.parametrize("p,page,d,b,nb", [(8, 4, 16, 2, 3), (32, 8, 64, 4, 4),
+                                           (5, 2, 8, 1, 5)])
+def test_page_gather_sweep(p, page, d, b, nb):
+    pages = jax.random.randint(jax.random.PRNGKey(0), (p, page, d),
+                               -128, 128, jnp.int8)
+    table = jax.random.randint(jax.random.PRNGKey(1), (b, nb), 0, p,
+                               jnp.int32)
+    got = page_gather(pages, table, interpret=True)
+    want = ref.page_gather_ref(pages, table)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_page_gather_clamps_out_of_range():
+    """Dead lanes carry id 0 / garbage ids; both must clamp, not wrap."""
+    pages = jnp.arange(4 * 2 * 4, dtype=jnp.int8).reshape(4, 2, 4)
+    table = jnp.asarray([[-3, 99]], jnp.int32)
+    got = page_gather(pages, table, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0, 0]),
+                                  np.asarray(pages[0]))
+    np.testing.assert_array_equal(np.asarray(got[0, 1]),
+                                  np.asarray(pages[3]))
+
+
+def test_page_gather_op_dispatch_trailing_dims():
+    from repro.kernels import ops
+    pages = jax.random.randint(jax.random.PRNGKey(0), (6, 4, 2, 8),
+                               -128, 128, jnp.int8)
+    table = jax.random.randint(jax.random.PRNGKey(1), (3, 2), 0, 6,
+                               jnp.int32)
+    got = ops.page_gather_op(pages, table)
+    assert got.shape == (3, 2, 4, 2, 8)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.page_gather_ref(pages, table)))
+    got2 = ops.page_gather_op(pages, table, force_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
 
 
 def test_ops_dispatch_cpu_oracle():
