@@ -23,7 +23,7 @@ def main() -> None:
 
     from . import (fig7_distributions, fig8_batchsize, fig9_10_e3,
                    fig11_cost, roofline_bench, serve_bench, table1_accuracy,
-                   table2_sensitivity)
+                   table2_sensitivity, train_bench)
     benches = {
         "table1": table1_accuracy.main,
         "table2": table2_sensitivity.main,
@@ -33,6 +33,7 @@ def main() -> None:
         "fig11": fig11_cost.main,
         "roofline": roofline_bench.main,
         "serve": serve_bench.main,
+        "train": train_bench.main,
     }
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     print("name,us_per_call,derived")

@@ -1,0 +1,90 @@
+"""Training benchmark: fused-epilogue kernels vs the unfused native path.
+
+Times one full fwd+bwd+update step of native-mode WAGEUBN training with the
+fused dgrad/wgrad/UBN route on and off (QConfig.fuse_kernels — the two are
+bit-exact, so this isolates the data-movement win of fusing Q_E2 into the
+matmul prologues and the five UBN quantizers into one pass).
+
+CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
+  train/<config>_fused    — us per training step; tokens/s
+  train/<config>_unfused  — same, fuse_kernels=False
+  train/<config>_speedup  — fused-vs-unfused step-time ratio
+
+Scale knobs: REPRO_BENCH_FAST drops the largest config and shortens the
+timed window.  On this CPU container both paths dispatch to the XLA
+oracles (identical math, different fusion structure); on a TPU backend the
+same toggle compares the compiled Pallas kernels.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from .common import emit
+
+
+def _configs(fast: bool):
+    from repro.configs.base import ArchConfig
+
+    def lm(name, d, layers, d_ff):
+        return ArchConfig(name=name, family="lm", n_layers=layers,
+                          d_model=d, n_heads=max(d // 64, 2),
+                          n_kv=max(d // 128, 1), d_ff=d_ff, vocab=256,
+                          head_dim=64, q_chunk=64, kv_chunk=64)
+
+    cfgs = [("lm-64", lm("bench-lm-64", 64, 2, 128), 4, 32),
+            ("lm-128", lm("bench-lm-128", 128, 2, 256), 4, 64)]
+    if not fast:
+        cfgs.append(("lm-192", lm("bench-lm-192", 192, 3, 384), 4, 64))
+    return cfgs
+
+
+def _time_steps(step_fn, params, opt, batch, n_steps):
+    import jax
+    import jax.numpy as jnp
+
+    # one warmup step outside the timer (compile + first dispatch)
+    p, o, m = step_fn(params, opt, batch, jnp.int32(0))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for i in range(n_steps):
+        p, o, m = step_fn(p, o, batch, jnp.int32(i + 1))
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / n_steps
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import preset
+    from repro.data import TokenTask
+    from repro.launch.train import make_train_step
+    from repro.models import build_model
+    from repro.optim import init_momentum
+
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    n_steps = 3 if fast else 8
+
+    for name, arch, batch_sz, seq in _configs(fast):
+        task = TokenTask(vocab=arch.vocab, seq_len=seq, global_batch=batch_sz)
+        batch = jax.tree.map(jnp.asarray, task.batch(0))
+        tokens = batch_sz * seq
+        step_us = {}
+        for label, fused in (("fused", True), ("unfused", False)):
+            qcfg = preset("full8", "native").replace(fuse_kernels=fused)
+            model = build_model(arch, qcfg)
+            params = model.init(jax.random.PRNGKey(0))
+            opt = init_momentum(params)
+            step_fn = jax.jit(
+                make_train_step(model, qcfg, model.labels(params)))
+            dt = _time_steps(step_fn, params, opt, batch, n_steps)
+            step_us[label] = dt * 1e6
+            emit(f"train/{name}_{label}", dt * 1e6,
+                 f"tok_s={tokens / dt:.1f};steps={n_steps}")
+        emit(f"train/{name}_speedup", 0.0,
+             f"fused_vs_unfused={step_us['unfused'] / step_us['fused']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

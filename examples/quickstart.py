@@ -36,6 +36,8 @@ def train(qcfg, steps=60):
 
 if __name__ == "__main__":
     from repro.core import registered_quantizers
+    from repro.kernels.ops import dispatch_banner
+    print(dispatch_banner())
     print("registered quantizers:", ", ".join(registered_quantizers()))
     print("training the same tiny LM under four numeric configs...")
     for name, mode in (("fp32", None), ("e2_16", "sim"), ("full8", "sim"),

@@ -121,6 +121,8 @@ def main():
 
     acfg = get(args.arch).reduced()
     qcfg = preset("full8", args.mode)
+    from repro.kernels.ops import dispatch_banner
+    print(dispatch_banner(qcfg))
     model = build_model(acfg, qcfg)
     params = model.init(jax.random.PRNGKey(0))
 

@@ -57,6 +57,8 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"model: {n_params/1e6:.1f}M params, preset={args.preset}")
+    from repro.kernels.ops import dispatch_banner
+    print(dispatch_banner(qcfg))
 
     opt = init_momentum(params)
     labels = model.labels(params)

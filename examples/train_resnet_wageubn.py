@@ -13,19 +13,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import train_resnet  # noqa: E402
 from repro.core import preset  # noqa: E402
+from repro.kernels.ops import dispatch_banner, dispatch_report  # noqa: E402
 
 
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=120)
     args = p.parse_args()
-    print(f"{'config':15s} {'holdout acc':12s} {'us/step':10s}")
+    print(dispatch_banner())
+    print(f"{'config':15s} {'path':15s} {'holdout acc':12s} {'us/step':10s}")
     for name, mode in (("fp32", None), ("e2_16", "sim"), ("full8", "sim"),
                        ("full8", "native")):
         qcfg = preset(name, mode)
         r = train_resnet(qcfg, args.steps)
         label = name if mode in (None, "sim") else f"{name}/{mode}"
-        print(f"{label:15s} {r['acc']:<12.4f} "
+        rep = dispatch_report(qcfg)
+        path = f"{rep['route']}/" + ("fused" if rep["fused"] else "unfused")
+        print(f"{label:15s} {path:15s} {r['acc']:<12.4f} "
               f"{r['wall_s'] / args.steps * 1e6:<10.0f}")
 
 

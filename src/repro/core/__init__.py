@@ -4,7 +4,8 @@ from .qtensor import (ALIASES, QTensor, QuantSpec, Quantizer, get_quantizer,
                       qt_carrier, quantize_ste, register_quantizer,
                       registered_quantizers, resolve_quantizer)
 from . import qfuncs
-from .qdense import qact, qconv, qdense, qeinsum, qprobs, qweight, qbn_param
+from .qdense import (qact, qconv, qdense, qdense_requant, qeinsum, qprobs,
+                     qweight, qbn_param)
 from .qnorm import qbatchnorm, qlayernorm, qrmsnorm
 
 __all__ = [
@@ -12,6 +13,6 @@ __all__ = [
     "ALIASES", "QTensor", "QuantSpec", "Quantizer", "get_quantizer",
     "qt_carrier", "quantize_ste", "register_quantizer",
     "registered_quantizers", "resolve_quantizer",
-    "qact", "qconv", "qdense", "qeinsum", "qprobs", "qweight", "qbn_param",
-    "qbatchnorm", "qlayernorm", "qrmsnorm",
+    "qact", "qconv", "qdense", "qdense_requant", "qeinsum", "qprobs",
+    "qweight", "qbn_param", "qbatchnorm", "qlayernorm", "qrmsnorm",
 ]

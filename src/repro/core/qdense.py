@@ -35,11 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
 from repro.kernels.ops import qmatmul_op
 
 from . import qfuncs as qf
 from .qconfig import QConfig
-from .qtensor import (QTensor, get_quantizer, qt_carrier,
+from .qtensor import (QTensor, get_quantizer, payload_dtype, qt_carrier,
                       qtensor_cotangent, quantize_ste, resolve_quantizer)
 
 Array = jax.Array
@@ -253,6 +254,42 @@ def _qeinsum_fwd(cfg, spec, e_kind, b_weight, a_tag, b_tag, a, b):
         (_save(a), _save(b))
 
 
+def _fusable_operand(q) -> bool:
+    return (isinstance(q, QTensor) and q.lo is None
+            and q.data.dtype == jnp.int8 and q.data.ndim == 2)
+
+
+def _fused_bwd(cfg, spec, quantizer, g, a_s, b_s, want_a, want_b):
+    """Fused-prologue backward route (DESIGN.md §8), or None to fall back.
+
+    For the canonical 2-D spec with single-plane int8 residuals, Q_E2 is
+    fused into the dgrad/wgrad matmul prologues: only the quantizer's scale
+    reduction (at most ONE amax, shared by both dots) runs here — the error
+    payload is emitted inside the kernels and never materialized.  Output
+    is bit-identical to quantizer.quantize + _qt_contract.
+    """
+    if not (cfg.fuse_kernels and spec == "mk,kn->mn"
+            and not isinstance(g, QTensor) and g.ndim == 2):
+        return None
+    if (want_a and not _fusable_operand(b_s)) or \
+            (want_b and not _fusable_operand(a_s)):
+        return None
+    plan = quantizer.fused_plan(g)
+    if plan is None:
+        return None
+    mode, steps, k = plan
+    inv = jnp.float32(1.0) / steps[0]          # pow2: exact reciprocal
+    s2 = steps[1] if len(steps) > 1 else jnp.float32(0.0)
+    da = db = None
+    if want_a:    # e4 = W^T e3, Q_E2 in the kernel prologue (Alg. 2)
+        scal = jnp.stack([inv, steps[0] * b_s.scale, s2 * b_s.scale])
+        da = ops.dgrad_op(g, b_s.data, scal, mode=mode, k=k)
+    if want_b:    # g_W = e3 x0^T, same fused prologue (Alg. 2)
+        scal = jnp.stack([inv, steps[0] * a_s.scale, s2 * a_s.scale])
+        db = ops.wgrad_op(a_s.data, g, scal, mode=mode, k=k)
+    return da, db
+
+
 def _qeinsum_bwd(cfg, spec, e_kind, b_weight, a_tag, b_tag, res, g):
     da_spec, db_spec = _bwd_specs(spec)
     a_s, b_s = res
@@ -266,6 +303,10 @@ def _qeinsum_bwd(cfg, spec, e_kind, b_weight, a_tag, b_tag, res, g):
 
     quantizer = _error_quantizer(cfg, e_kind)
     if cfg.native:
+        fused = _fused_bwd(cfg, spec, quantizer, g, a_s, b_s, want_a, want_b)
+        if fused is not None:
+            da, db = fused
+            return _wrap_ct(a_tag, a_s, da), _wrap_ct(b_tag, b_s, db)
         gq = quantizer.quantize(g)     # e3 = Q_E2(e2), decomposed once
         da = db = None
         if want_a:
@@ -295,6 +336,37 @@ def qdense(cfg: QConfig, x, w: Array, e_kind="default") -> Array:
     xm = x.reshape((-1, x.shape[-1]))
     y = qeinsum(cfg, "mk,kn->mn", e_kind, True, xm, wq)
     return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+def qdense_requant(cfg: QConfig, x, w: Array, step, k: int = 8) -> QTensor:
+    """Forward-only qdense emitting the payload on a FIXED pow2 `step`.
+
+    The serving-side entry to the fused requantize epilogue (DESIGN.md §8):
+    in native mode with single-plane int8 operands the Pallas matmul's
+    epilogue performs int32 accumulate -> pow2 rescale -> round -> clip and
+    writes the int8 payload directly — no fp32 carrier, no separate
+    quantize pass.  Other modes fall back to qdense + requantize, which is
+    bit-identical (every rescale is an exact pow2 scaling).
+
+    x: (..., K) activation (Array or QTensor); w: (K, N) master weights;
+    `step` must be a known power of two (e.g. the KV pool's 2^-7).
+    Returns a carrier-less QTensor (non-differentiable by construction).
+    """
+    step = jnp.asarray(step, jnp.float32)
+    lim = 2.0 ** (k - 1) - 1.0
+    out_shape = x.shape[:-1] + (w.shape[-1],)
+    if cfg.quantize and cfg.native and cfg.fuse_kernels and k <= 8:
+        wq = qweight(cfg, w)
+        xm = x.reshape((-1, x.shape[-1]))
+        qa = _fwd_quantize(cfg, xm, False)
+        qb = _fwd_quantize(cfg, wq, True)
+        if _fusable_operand(qa) and _fusable_operand(qb):
+            inv = qa.scale * qb.scale / step     # all pow2: exact
+            data = ops.qmatmul_op(qa.data, qb.data, inv, lim=lim)
+            return QTensor(data.reshape(out_shape), step, k)
+    y = lax.stop_gradient(qt_carrier(qdense(cfg, x, w)))
+    data = jnp.clip(jnp.round(y / step), -lim, lim).astype(payload_dtype(k))
+    return QTensor(data, step, k)
 
 
 # --------------------------------------------------------------------------
@@ -332,7 +404,21 @@ def _qconv_fwd(cfg, x, wq, stride, padding):
 
 def _qconv_bwd(cfg, stride, padding, vjp, g):
     if cfg.quantize and cfg.quant_e2:
-        g = cfg.e2.make()(g)           # e3 = Q_E2(...)
+        quantizer = cfg.e2.make()
+        plan = (quantizer.fused_plan(g)
+                if cfg.native and cfg.fuse_kernels else None)
+        if plan is not None and plan[0] == "affine" and plan[2] <= 8 \
+                and quantizer.name != "none":
+            # single-plane int8 formats decompose through the fused
+            # quantize kernel dispatch (quantize_op), so e3 materializes
+            # once as its int8 payload; the conv vjp consumes the grid
+            # value (== the legacy fp32 formula bit-exactly, per the
+            # registry invariant).  Multi-plane (flag) and wide formats
+            # keep the one-pass legacy formula — decomposing them here
+            # would add passes, not remove them.
+            g = quantizer.quantize(g).dequantize()
+        else:
+            g = quantizer(g)           # e3 = Q_E2(...)
     return vjp(g)
 
 

@@ -273,6 +273,19 @@ class Quantizer:
     def planes(self, qt: QTensor):
         return qt.planes()
 
+    def fused_plan(self, x: Array):
+        """Scalar recipe for fusing this quantizer into a matmul prologue.
+
+        Returns (mode, plane_steps, k) — mode "affine" (one plane,
+        payload = clip(round(x / plane_steps[0]), ±(2^(k-1)-1))) or "flag"
+        (two planes at steps (Sc, Sc*2^(1-k))) — or None when the format
+        cannot be fused (e.g. stochastic rounding needs a PRNG plane).
+        Only the scale reduction (at most one amax) runs here; payload
+        emission happens inside the fused kernel.  The planes must be
+        bit-identical to `quantize(x).planes()`.
+        """
+        return None
+
 
 @dataclass(frozen=True)
 class IdentityQuantizer(Quantizer):
@@ -289,6 +302,10 @@ class IdentityQuantizer(Quantizer):
     def quantize(self, x, *, key=None):
         s = jnp.maximum(qf.pow2_ceil(qf.amax(x)), 2.0 ** -24)
         return _decompose(x, s * 2.0 ** (1 - self.k), self.k)
+
+    def fused_plan(self, x):
+        s = jnp.maximum(qf.pow2_ceil(qf.amax(x)), 2.0 ** -24)
+        return ("affine", (s * 2.0 ** (1 - self.k),), self.k)
 
 
 @dataclass(frozen=True)
@@ -320,6 +337,10 @@ class DirectQuantizer(Quantizer):
     def quantize(self, x, *, key=None):
         return _decompose(x, 2.0 ** (1 - self.k), self.k)
 
+    def fused_plan(self, x):
+        # fixed grid step: no amax at all
+        return ("affine", (jnp.float32(2.0 ** (1 - self.k)),), self.k)
+
 
 @dataclass(frozen=True)
 class ClipQuantizer(Quantizer):
@@ -334,6 +355,9 @@ class ClipQuantizer(Quantizer):
 
     def quantize(self, x, *, key=None):
         return _decompose(x, 2.0 ** (1 - self.k), self.k)
+
+    def fused_plan(self, x):
+        return ("affine", (jnp.float32(2.0 ** (1 - self.k)),), self.k)
 
 
 @dataclass(frozen=True)
@@ -351,6 +375,10 @@ class ScaledQuantizer(Quantizer):
         s = jnp.maximum(qf.pow2_ceil(qf.amax(x)), 1.0)
         return _decompose(x, s * 2.0 ** (1 - self.k), self.k)
 
+    def fused_plan(self, x):
+        s = jnp.maximum(qf.pow2_ceil(qf.amax(x)), 1.0)
+        return ("affine", (s * 2.0 ** (1 - self.k),), self.k)
+
 
 @dataclass(frozen=True)
 class ShiftQuantizer(Quantizer):
@@ -364,6 +392,10 @@ class ShiftQuantizer(Quantizer):
     def quantize(self, x, *, key=None):
         r = qf.pow2_round(qf.amax(x))
         return _decompose(x, r * 2.0 ** (1 - self.k), self.k)
+
+    def fused_plan(self, x):
+        r = qf.pow2_round(qf.amax(x))
+        return ("affine", (r * 2.0 ** (1 - self.k),), self.k)
 
 
 @dataclass(frozen=True)
@@ -395,6 +427,11 @@ class FlagQuantizer(Quantizer):
         dt = payload_dtype(k)
         return QTensor(hi.astype(dt), sc, k,
                        lo=lo.astype(dt), lo_scale=sc * 2.0 ** (1 - k))
+
+    def fused_plan(self, x):
+        r = qf.pow2_round(qf.amax(x))
+        sc = r / 2.0 ** (self.k - 1)
+        return ("flag", (sc, sc * 2.0 ** (1 - self.k)), self.k)
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,16 @@
+"""Shared Pallas-TPU import surface for the kernel modules.
+
+`pltpu` is None when the TPU extras are unavailable; `CompilerParams`
+resolves the class across jax versions (renamed from TPUCompilerParams),
+or None when Pallas-TPU is absent entirely.
+"""
+from __future__ import annotations
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or getattr(pltpu, "TPUCompilerParams", None)
+                  if pltpu is not None else None)

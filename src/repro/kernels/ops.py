@@ -4,6 +4,22 @@ This container lowers Pallas TPU kernels only under interpret=True, so the
 default execution path on CPU is the oracle (identical math); tests sweep
 the kernels in interpret mode against the oracles.  On a TPU backend the
 compiled kernels are selected automatically.
+
+The eight dispatched ops (DESIGN.md §8 maps them onto the paper's data
+paths):
+
+  qmatmul_op        — int8 x int8 -> int32 MAC, optional fused requantize
+                      epilogue emitting an int8 payload directly
+  quantize_op       — fused scale/round/clip payload emission (Q/SQ)
+  cq_op             — stochastic-rounding CQ payload (Eq. 7)
+  dgrad_op          — backward input-error dot e4 = W^T e3 with Q_E2 fused
+                      into the matmul prologue (Alg. 2)
+  wgrad_op          — backward weight-gradient dot g_W = e3 x0^T, same
+                      fused prologue
+  ubn_norm_op       — fused UBN: statistics + normalize + the five direct
+                      quantizers in one pass
+  page_gather_op    — paged int8 KV-cache gather (serving)
+  selective_scan_op — SSM recurrence (fp32 VPU over gridded inputs)
 """
 from __future__ import annotations
 
@@ -11,25 +27,52 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .backward import bwd_dgrad, bwd_wgrad
 from .page_gather import page_gather
 from .qmatmul import qmatmul
 from .quantize import cq_stochastic, quantize_fused
 from .selective_scan import selective_scan
+from .ubn import ubn_norm
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def qmatmul_op(a8, b8, *, force_kernel=False):
+def qmatmul_op(a8, b8, requant_inv=None, *, lim=127.0, force_kernel=False):
+    """Integer matmul, optionally with the fused requantize epilogue.
+
+    Args:
+      a8: (M, K) int8 payload; b8: (K, N) int8 payload.
+      requant_inv: optional scalar f32 — combined pow2 rescale
+        a_scale * b_scale / out_step.  When given, the kernel epilogue
+        emits clip(round(acc * requant_inv), +-lim) int8 directly; no fp32
+        carrier and no separate quantize pass exist between the MAC and
+        the payload.
+      lim: epilogue clip bound (2^(k-1)-1 for a k-bit payload).
+
+    Returns:
+      (M, N) int32 accumulator, or (M, N) int8 payload with requant_inv.
+    """
     if _on_tpu():
-        return qmatmul(a8, b8, interpret=False)
+        return qmatmul(a8, b8, requant_inv, lim=lim, interpret=False)
     if force_kernel:
-        return qmatmul(a8, b8, interpret=True)
-    return ref.qmatmul_ref(a8, b8)
+        return qmatmul(a8, b8, requant_inv, lim=lim, interpret=True)
+    if requant_inv is None:
+        return ref.qmatmul_ref(a8, b8)
+    return ref.qmatmul_requant_ref(a8, b8, requant_inv, lim)
 
 
 def quantize_op(x, inv_step, lim=127.0, *, force_kernel=False):
+    """Fused shift/direct quantize payload emission.
+
+    Args:
+      x: (M, N) f32 on/near a fixed-point grid; inv_step: scalar f32 exact
+      pow2 reciprocal of the grid step; lim: clip bound.
+
+    Returns:
+      (M, N) int8 payload clip(round(x * inv_step), +-lim).
+    """
     if _on_tpu():
         return quantize_fused(x, inv_step, lim=lim, interpret=False)
     if force_kernel:
@@ -38,6 +81,15 @@ def quantize_op(x, inv_step, lim=127.0, *, force_kernel=False):
 
 
 def cq_op(x, bits, inv_step, dr=128.0, *, force_kernel=False):
+    """Stochastic-rounding CQ payload (paper Eq. 7).
+
+    Args:
+      x: (M, N) f32 gradient; bits: (M, N) uint32 random bits;
+      inv_step: scalar f32 rescale; dr: dynamic-range bound.
+
+    Returns:
+      (M, N) int16 payload clip(Sr(x * inv_step), +-(dr-1)).
+    """
     if _on_tpu():
         return cq_stochastic(x, bits, inv_step, dr=dr, interpret=False)
     if force_kernel:
@@ -45,12 +97,100 @@ def cq_op(x, bits, inv_step, dr=128.0, *, force_kernel=False):
     return ref.cq_stochastic_ref(x, bits, inv_step, dr)
 
 
-def page_gather_op(pages, table, *, force_kernel=False):
-    """pages: (P, page, *rest) + table: (B, NB) -> (B, NB, page, *rest).
+def dgrad_op(g, b8, scal, *, mode="affine", k=8, force_kernel=False):
+    """Fused-prologue backward input-error dot (paper Alg. 2, e4 = W^T e3).
 
-    The serving engine's paged-KV gather: physical int8 pages named by a
-    per-lane page table become a contiguous per-lane view.  Trailing dims
-    are flattened for the kernel and restored on the way out.
+    Args:
+      g: (M, N) f32 incoming error e2; b8: (K, N) int8 payload of the
+      forward weight operand; scal: (3,) f32 [inv, s1, s2] where inv is
+      the exact pow2 reciprocal of the Q_E payload step and s1/s2 are the
+      per-plane output scales (plane_step * b_scale).
+      mode: "affine" (SQ/grid/direct, one plane) | "flag" (Eq. 17, two
+      planes); k: Q_E bit width.
+
+    Returns:
+      (M, K) f32 da — the integer dots' dequantized sum.  The error payload
+      is produced inside the kernel prologue and never stored.
+    """
+    if _on_tpu():
+        return bwd_dgrad(g, b8, scal, mode=mode, k=k, interpret=False)
+    if force_kernel:
+        return bwd_dgrad(g, b8, scal, mode=mode, k=k, interpret=True)
+    return ref.dgrad_ref(g, b8, scal, mode=mode, k=k)
+
+
+def wgrad_op(a8, g, scal, *, mode="affine", k=8, force_kernel=False):
+    """Fused-prologue backward weight-gradient dot (Alg. 2, g_W = e3 x0^T).
+
+    Args:
+      a8: (M, K) int8 payload of the saved forward activation x0;
+      g: (M, N) f32 incoming error e2; scal: (3,) f32 [inv, s1, s2]
+      (s1/s2 = plane_step * a_scale); mode/k as in dgrad_op.
+
+    Returns:
+      (K, N) f32 db on the same dequantized scale as the unfused path.
+    """
+    if _on_tpu():
+        return bwd_wgrad(a8, g, scal, mode=mode, k=k, interpret=False)
+    if force_kernel:
+        return bwd_wgrad(a8, g, scal, mode=mode, k=k, interpret=True)
+    return ref.wgrad_ref(a8, g, scal, mode=mode, k=k)
+
+
+# the UBN kernel holds the full statistics axis in one VMEM block (the
+# stats need every element); in + out f32 blocks => 8 bytes per element of
+# (stats_axis x tile).  Tiles shrink to fit this budget, and shapes whose
+# statistics axis alone exceeds it fall back to the XLA oracle.
+_UBN_VMEM_BUDGET = 4 * 2 ** 20
+
+
+def _ubn_tile(kind: str, m: int, n: int) -> int | None:
+    """Largest safe tile along the non-statistics axis, or None -> oracle."""
+    stats_axis = m if kind == "batch" else n
+    fit = _UBN_VMEM_BUDGET // (8 * max(stats_axis, 1))
+    return None if fit < 8 else min(256, fit)
+
+
+def ubn_norm_op(x, gamma, beta=None, *, kind="rms", k_mu=16, k_sigma=16,
+                k_bn=16, k_gamma=8, k_beta=8, eps=2.0 ** -8,
+                force_kernel=False):
+    """Fused UBN: statistics + normalize + output quantization, one pass.
+
+    Args:
+      x: (M, N) f32 — rows are tokens for "rms"/"layer"; for "batch" the
+      caller flattens leading axes so statistics reduce over M per channel.
+      gamma: (N,) f32; beta: (N,) f32 or None (rms has no shift).
+      kind: "rms" | "layer" | "batch"; k_*: the paper's five norm widths;
+      eps: epsilon_q (Eq. 12).
+
+    Returns:
+      (M, N) f32 on the k_BN/k_gamma grid, bit-identical to the unfused
+      sim-mode composition in core/qnorm.py.  Shapes whose statistics axis
+      cannot fit a VMEM block (huge flattened batch for "batch") lower
+      through the XLA oracle instead — same math.
+    """
+    kw = dict(kind=kind, k_mu=k_mu, k_sigma=k_sigma, k_bn=k_bn,
+              k_gamma=k_gamma, k_beta=k_beta, eps=eps)
+    bt = _ubn_tile(kind, x.shape[0], x.shape[1])
+    if bt is not None and _on_tpu():
+        return ubn_norm(x, gamma, beta, interpret=False, bt=bt, **kw)
+    if bt is not None and force_kernel:
+        return ubn_norm(x, gamma, beta, interpret=True, bt=bt, **kw)
+    return ref.ubn_norm_ref(x, gamma, beta, **kw)
+
+
+def page_gather_op(pages, table, *, force_kernel=False):
+    """Paged int8 KV-cache gather (the serving engine's decode read).
+
+    Args:
+      pages: (P, page, *rest) int8 physical page arena; table: (B, NB)
+      int32 per-lane page ids (out-of-range ids clamp; id 0 is the trash
+      page dead lanes point at).
+
+    Returns:
+      (B, NB, page, *rest) int8 contiguous per-lane view — no dequantize.
+      Trailing dims are flattened for the kernel and restored on the way
+      out.
     """
     rest = pages.shape[2:]
     if _on_tpu() or force_kernel:
@@ -62,8 +202,52 @@ def page_gather_op(pages, table, *, force_kernel=False):
 
 
 def selective_scan_op(a, b, c, *, force_kernel=False):
+    """SSM selective-scan recurrence h_t = a_t h_{t-1} + b_t; y_t = c_t·h_t.
+
+    Args:
+      a, b: (B, S, D, N) f32 gridded scan inputs; c: (B, S, N) f32.
+
+    Returns:
+      (B, S, D) f32 outputs (fp32 VPU over 16-bit-gridded inputs —
+      DESIGN.md §6).
+    """
     if _on_tpu():
         return selective_scan(a, b, c, interpret=False)
     if force_kernel:
         return selective_scan(a, b, c, interpret=True)
     return ref.selective_scan_ref(a, b, c)
+
+
+# --------------------------------------------------------------------------
+# dispatch introspection (examples' startup banners, launch/report.py)
+# --------------------------------------------------------------------------
+
+OPS = ("qmatmul", "quantize", "cq", "dgrad", "wgrad", "ubn_norm",
+       "page_gather", "selective_scan")
+
+
+def dispatch_report(cfg=None) -> dict:
+    """What the ops above resolve to right now.
+
+    Returns {"backend", "route" ("kernel" on TPU else "oracle"),
+    "ops": {name: route}}; with a QConfig also "mode" and "fused" (whether
+    native mode routes backward/UBN through the fused ops).
+    """
+    route = "kernel" if _on_tpu() else "oracle"
+    rep = {"backend": jax.default_backend(), "route": route,
+           "ops": {name: route for name in OPS}}
+    if cfg is not None:
+        rep["mode"] = cfg.mode
+        rep["fused"] = bool(cfg.native and getattr(cfg, "fuse_kernels", True))
+    return rep
+
+
+def dispatch_banner(cfg=None) -> str:
+    """One-line startup banner, e.g.
+    '[kernels] backend=cpu route=oracle mode=native bwd/ubn=fused'."""
+    rep = dispatch_report(cfg)
+    line = f"[kernels] backend={rep['backend']} route={rep['route']}"
+    if cfg is not None:
+        fused = "fused" if rep["fused"] else "unfused"
+        line += f" mode={rep['mode']} bwd/ubn={fused}"
+    return line

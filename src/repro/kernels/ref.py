@@ -10,6 +10,98 @@ def qmatmul_ref(a8: jax.Array, b8: jax.Array) -> jax.Array:
     return jnp.dot(a8, b8, preferred_element_type=jnp.int32)
 
 
+def qmatmul_requant_ref(a8: jax.Array, b8: jax.Array, inv: jax.Array,
+                        lim: float = 127.0) -> jax.Array:
+    """Fused-epilogue matmul: clip(round(int_dot * inv), +-lim) int8.
+
+    inv is the combined pow2 rescale a_scale * b_scale / out_step — the
+    epilogue of kernels/qmatmul.qmatmul(requant_inv=...).
+    """
+    acc = qmatmul_ref(a8, b8).astype(jnp.float32)
+    return jnp.clip(jnp.round(acc * inv), -lim, lim).astype(jnp.int8)
+
+
+def bwd_error_planes_ref(g: jax.Array, inv: jax.Array, *, mode: str,
+                         k: int) -> tuple:
+    """Q_E payload plane(s) of an error tensor — the fused-prologue formula.
+
+    "affine": one clip(round(g*inv), +-lim) plane (int8 for k<=8 else
+    int16); "flag": the two disjoint-support int8 planes of Eq. 17.
+    Bit-identical to the matching Quantizer.quantize payloads.
+    """
+    lim = 2.0 ** (k - 1) - 1.0
+    dt = jnp.int8 if k <= 8 else jnp.int16
+    if mode == "affine":
+        return (jnp.clip(jnp.round(g * inv), -lim, lim).astype(dt),)
+    assert mode == "flag", mode
+    n = g * inv
+    nlo = jnp.round(n * 2.0 ** (k - 1))
+    isbig = (jnp.abs(n) >= 1.0) | (jnp.abs(nlo) >= 2.0 ** (k - 1))
+    hi = jnp.where(isbig, jnp.clip(jnp.round(n), -lim, lim), 0.0)
+    lo = jnp.where(isbig, 0.0, jnp.clip(nlo, -lim, lim))
+    return (hi.astype(dt), lo.astype(dt))
+
+
+def dgrad_ref(g: jax.Array, b8: jax.Array, scal: jax.Array, *, mode: str,
+              k: int) -> jax.Array:
+    """da (M,K) = sum_planes einsum('mn,kn->mk', Qe(g), b8)_int32 * s_plane.
+
+    scal: (3,) f32 [inv, s1, s2] as in kernels/backward.bwd_dgrad.
+    """
+    planes = bwd_error_planes_ref(g, scal[0], mode=mode, k=k)
+    y = None
+    for q, s in zip(planes, (scal[1], scal[2])):
+        t = jnp.einsum("mn,kn->mk", q, b8,
+                       preferred_element_type=jnp.int32).astype(jnp.float32) \
+            * s
+        y = t if y is None else y + t
+    return y
+
+
+def wgrad_ref(a8: jax.Array, g: jax.Array, scal: jax.Array, *, mode: str,
+              k: int) -> jax.Array:
+    """db (K,N) = sum_planes einsum('mk,mn->kn', a8, Qe(g))_int32 * s_plane."""
+    planes = bwd_error_planes_ref(g, scal[0], mode=mode, k=k)
+    y = None
+    for q, s in zip(planes, (scal[1], scal[2])):
+        t = jnp.einsum("mk,mn->kn", a8, q,
+                       preferred_element_type=jnp.int32).astype(jnp.float32) \
+            * s
+        y = t if y is None else y + t
+    return y
+
+
+def _q_direct_ref(x, k: int):
+    s = 2.0 ** (k - 1)
+    return jnp.round(x * s) / s
+
+
+def ubn_norm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array | None, *,
+                 kind: str, k_mu: int, k_sigma: int, k_bn: int, k_gamma: int,
+                 k_beta: int, eps: float) -> jax.Array:
+    """Fused-UBN oracle: stats + normalize + the five direct quantizers.
+
+    x: (M, N); stats over N per row ("rms"/"layer") or over M per column
+    ("batch").  Bit-identical to the sim-mode core/qnorm.py composition.
+    """
+    axis = 0 if kind == "batch" else -1
+    if kind == "rms":
+        sigma = jnp.sqrt(jnp.mean(jnp.square(x), axis=axis, keepdims=True))
+        xhat = x / (_q_direct_ref(sigma, k_sigma) + eps)
+    else:
+        mu = jnp.mean(x, axis=axis, keepdims=True)
+        var = jnp.mean(jnp.square(x), axis=axis, keepdims=True) \
+            - jnp.square(mu)
+        sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+        xhat = (x - _q_direct_ref(mu, k_mu)) \
+            / (_q_direct_ref(sigma, k_sigma) + eps)
+    xhat = _q_direct_ref(xhat, k_bn)
+    y = _q_direct_ref(gamma.reshape(1, -1), k_gamma) * xhat
+    if kind != "rms":
+        y = y + _q_direct_ref(beta.reshape(1, -1), k_beta)
+    return y
+
+
 def quantize_ref(x: jax.Array, inv_step: jax.Array, lim: float) -> jax.Array:
     """Fused shift/direct quantize payload: clip(round(x*inv_step), +-lim)."""
     return jnp.clip(jnp.round(x * inv_step), -lim, lim).astype(jnp.int8)

@@ -18,10 +18,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-try:
-    from jax.experimental.pallas import tpu as pltpu
-except ImportError:  # pragma: no cover
-    pltpu = None
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import pltpu
 
 
 def _ssm_kernel(a_ref, b_ref, c_ref, o_ref, h_ref, *, bs):
@@ -54,8 +52,8 @@ def selective_scan(a: jax.Array, b: jax.Array, c: jax.Array, *,
 
     grid = (bsz, dd // bd, ss // bs)
     kwargs = {}
-    if not interpret and pltpu is not None:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
+    if not interpret and _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
     scratch = (pltpu.VMEM((bd, n), jnp.float32) if pltpu is not None
                else pl.MemorySpace.ANY)  # pragma: no cover

@@ -69,12 +69,33 @@ def variant_table(arts, arch, shape, mesh="single"):
     return "\n".join(rows)
 
 
+def kernel_table() -> str:
+    """Active kernel dispatch (kernel/oracle per op, fused/unfused per
+    numeric mode) — what the examples' startup banners print, as a table."""
+    from repro.core.qconfig import preset
+    from repro.kernels.ops import dispatch_report
+
+    rep = dispatch_report()
+    rows = [f"backend: {rep['backend']}", "",
+            "| op | route |", "|---|---|"]
+    rows += [f"| {op} | {route} |" for op, route in rep["ops"].items()]
+    rows += ["", "| mode | bwd/ubn path |", "|---|---|"]
+    for mode in ("sim", "native"):
+        r = dispatch_report(preset("full8", mode))
+        rows.append(f"| {mode} | {'fused' if r['fused'] else 'unfused'} |")
+    return "\n".join(rows)
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--art-dir", default="artifacts/dryrun")
     p.add_argument("--section", default="all",
-                   choices=["all", "dryrun", "roofline"])
+                   choices=["all", "dryrun", "roofline", "kernels"])
     args = p.parse_args(argv)
+    if args.section == "kernels":
+        print("### Kernel dispatch\n")
+        print(kernel_table())
+        return
     arts = load_artifacts(args.art_dir)
     if args.section in ("all", "dryrun"):
         print("### Dry-run — single pod (16x16 = 256 chips)\n")
@@ -84,6 +105,9 @@ def main(argv=None):
     if args.section in ("all", "roofline"):
         print("\n### Roofline (single pod)\n")
         print(roofline_table(arts, "single"))
+    if args.section == "all":
+        print("\n### Kernel dispatch\n")
+        print(kernel_table())
 
 
 if __name__ == "__main__":

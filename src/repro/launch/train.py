@@ -147,6 +147,8 @@ def main(argv=None):
     if args.reduced:
         acfg = acfg.reduced()
     qcfg = preset(args.preset, args.mode if args.preset != "fp32" else None)
+    from repro.kernels.ops import dispatch_banner
+    print(dispatch_banner(qcfg))
     model = build_model(acfg, qcfg)
 
     from repro.data import TokenTask

@@ -63,7 +63,22 @@ def make_sampler(vocab: int, temperature: float = 0.0, top_k: int = 0):
 
 
 class Engine:
-    """Continuous-batching serving engine over the paged QTensor KV pool."""
+    """Continuous-batching serving engine over the paged QTensor KV pool.
+
+    Args:
+      model: a built model exposing the decode-state slot API
+        (`decode_state_spec` / `init_slots` / `slot_from_cache` /
+        `paged_decode_step`); params: its parameter pytree.
+      max_lanes: decode batch width (padded; dead lanes ride along masked).
+      page_size: tokens per KV page; n_pages: pool size (default
+        1 + max_lanes * ceil(max_ctx / page_size) — every lane can hold a
+        full-context request); max_ctx: per-request prompt + generation cap.
+      temperature/top_k: sampling policy (0.0 = greedy); seed: PRNG seed.
+      watchdog: StepWatchdog timing each fused step; clock: time source.
+
+    Raises ValueError if the model family is not servable or the pool
+    cannot hold one max-context request (the progress guarantee).
+    """
 
     def __init__(self, model, params, *, max_lanes: int = 4,
                  page_size: int = 8, n_pages: int | None = None,
@@ -128,6 +143,19 @@ class Engine:
     # ---- submission ------------------------------------------------------
 
     def submit(self, prompt, max_new: int, arrival: float | None = None):
+        """Queue one request.
+
+        Args:
+          prompt: (S,) int token ids (any array-like; flattened to int32);
+          max_new: generation budget >= 1; arrival: submission timestamp on
+          the engine clock (defaults to now — TTFT is measured from it).
+
+        Returns:
+          The request id (int), usable as the key into `drain()`'s result.
+
+        Raises ValueError on an empty prompt, max_new < 1, or
+        S + max_new > max_ctx.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) == 0 or max_new < 1:
             raise ValueError("need a non-empty prompt and max_new >= 1")
@@ -142,7 +170,13 @@ class Engine:
     # ---- engine step -----------------------------------------------------
 
     def step(self) -> list[Request]:
-        """One engine step: admit+prefill, ensure pages, fused decode."""
+        """One engine step: admit+prefill, ensure pages, fused decode.
+
+        Returns:
+          The requests that finished during this step (their `.generated`
+          lists hold the sampled tokens).  One fused decode trace covers
+          all live lanes; fresh admissions join the same step's batch.
+        """
         finished = []
         free = [ln for ln, r in enumerate(self.lane_req) if r is None]
         for req in self.scheduler.admit(len(free)):
@@ -178,7 +212,13 @@ class Engine:
         return finished
 
     def drain(self, max_steps: int = 100_000) -> dict[int, list[int]]:
-        """Step until every submitted request completes; rid -> tokens."""
+        """Step until every submitted request completes.
+
+        Returns:
+          {request id: [generated token ids]} for all DONE requests.
+
+        Raises RuntimeError if the queue has not emptied after max_steps.
+        """
         for _ in range(max_steps):
             if (not self.scheduler.queue
                     and all(r is None for r in self.lane_req)):
@@ -303,6 +343,13 @@ class Engine:
         return len(mapping)
 
     def metrics(self) -> dict:
+        """Engine aggregates + per-request rollups.
+
+        Returns a dict with: engine_steps, decode_steps, decode_wall_s,
+        completed, generated_tokens, queue_depth, live_lanes, preemptions,
+        straggler_steps, ttft_mean_s / ttft_max_s (over DONE requests),
+        decode_tok_s, and "pool" (the PagePool.report() dict) when paged.
+        """
         done = [r for r in self.scheduler.requests.values()
                 if r.state is RequestState.DONE]
         ttfts = [r.ttft for r in done if r.ttft is not None]

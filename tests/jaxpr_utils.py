@@ -1,0 +1,30 @@
+"""Shared jaxpr-introspection helpers for the fused-kernel tests."""
+
+
+def collect_outside_pallas(jaxpr, out):
+    """Append (primitive name, out shape) for every eqn reachable from
+    `jaxpr`, recursing through sub-jaxprs (pjit, custom_vjp, scan, ...) but
+    NOT into pallas_call bodies — those record as ("pallas_call", None).
+
+    The fused-kernel acceptance checks are phrased over this listing: a
+    tensor-shaped round/clamp outside a pallas body is a standalone
+    quantize pass; a dot_general outside one is an un-kerneled matmul.
+    """
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(("pallas_call", None))
+            continue
+        subs = []
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for vv in vs:
+                if hasattr(vv, "eqns"):
+                    subs.append(vv)
+                elif hasattr(vv, "jaxpr") and hasattr(vv.jaxpr, "eqns"):
+                    subs.append(vv.jaxpr)
+        if subs:
+            for sub in subs:
+                collect_outside_pallas(sub, out)
+        else:
+            shp = eqn.outvars[0].aval.shape if eqn.outvars else ()
+            out.append((eqn.primitive.name, shp))

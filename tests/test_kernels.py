@@ -6,10 +6,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.backward import bwd_dgrad, bwd_wgrad
 from repro.kernels.page_gather import page_gather
 from repro.kernels.qmatmul import qmatmul
 from repro.kernels.quantize import cq_stochastic, quantize_fused
 from repro.kernels.selective_scan import selective_scan
+from repro.kernels.ubn import ubn_norm
 
 
 @pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 128, 128),
@@ -129,3 +131,159 @@ def test_ops_dispatch_cpu_oracle():
                                   np.asarray(ref.qmatmul_ref(a, a)))
     got2 = ops.qmatmul_op(a, a, force_kernel=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(got2))
+
+
+# --------------------------------------------------------------------------
+# fused requantize epilogue
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (37, 70, 19),
+                                   (128, 256, 64), (1, 17, 5)])
+@pytest.mark.parametrize("inv", [2.0 ** -10, 2.0 ** -6, 2.0 ** -14])
+def test_qmatmul_requant_sweep(m, k, n, inv):
+    a = jax.random.randint(jax.random.PRNGKey(0), (m, k), -128, 128,
+                           jnp.int8)
+    b = jax.random.randint(jax.random.PRNGKey(1), (k, n), -128, 128,
+                           jnp.int8)
+    got = qmatmul(a, b, jnp.float32(inv), bm=32, bn=32, bk=64,
+                  interpret=True)
+    want = ref.qmatmul_requant_ref(a, b, jnp.float32(inv))
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qmatmul_requant_saturates():
+    a = jnp.full((8, 64), 127, jnp.int8)
+    b = jnp.full((64, 8), 127, jnp.int8)
+    got = qmatmul(a, b, jnp.float32(1.0), interpret=True)   # way over range
+    assert int(got[0, 0]) == 127 and got.dtype == jnp.int8
+
+
+# --------------------------------------------------------------------------
+# fused-prologue backward kernels (dgrad / wgrad)
+# --------------------------------------------------------------------------
+
+_BWD_MODES = [("affine", 8), ("affine", 16), ("flag", 8)]
+
+
+def _bwd_data(m, k, n, scale=0.3):
+    g = jax.random.normal(jax.random.PRNGKey(2), (m, n)) * scale
+    w8 = jax.random.randint(jax.random.PRNGKey(3), (k, n), -128, 128,
+                            jnp.int8)
+    a8 = jax.random.randint(jax.random.PRNGKey(4), (m, k), -128, 128,
+                            jnp.int8)
+    step = jnp.float32(2.0 ** -9)
+    scal = jnp.stack([1.0 / step, step * 2.0 ** -7, step * 2.0 ** -14])
+    return g, w8, a8, scal
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (37, 70, 19), (6, 32, 16),
+                                   (128, 128, 128), (1, 13, 33)])
+@pytest.mark.parametrize("mode,kb", _BWD_MODES)
+def test_bwd_dgrad_sweep(m, k, n, mode, kb):
+    g, w8, _, scal = _bwd_data(m, k, n)
+    got = bwd_dgrad(g, w8, scal, mode=mode, k=kb, bm=32, bk=32, bn=16,
+                    interpret=True)
+    want = ref.dgrad_ref(g, w8, scal, mode=mode, k=kb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (37, 70, 19), (6, 32, 16),
+                                   (128, 128, 128), (1, 13, 33)])
+@pytest.mark.parametrize("mode,kb", _BWD_MODES)
+def test_bwd_wgrad_sweep(m, k, n, mode, kb):
+    g, _, a8, scal = _bwd_data(m, k, n)
+    got = bwd_wgrad(a8, g, scal, mode=mode, k=kb, bm=32, bk=32, bn=16,
+                    interpret=True)
+    want = ref.wgrad_ref(a8, g, scal, mode=mode, k=kb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode,kb", _BWD_MODES)
+def test_bwd_prologue_matches_quantizer_payloads(mode, kb):
+    """The kernels' in-prologue quantize must equal Quantizer.quantize —
+    the contract that makes the fused route bit-exact vs the legacy path."""
+    from repro.core.qtensor import get_quantizer
+    g = jax.random.normal(jax.random.PRNGKey(5), (24, 40)) * 0.4
+    name = "flag" if mode == "flag" else "sq"
+    q = get_quantizer(name, kb)
+    plan = q.fused_plan(g)
+    assert plan is not None and plan[0] == mode
+    steps = plan[1]
+    planes = ref.bwd_error_planes_ref(g, 1.0 / steps[0], mode=mode, k=kb)
+    want = q.quantize(g).planes()
+    assert len(planes) == len(want)
+    for got_p, (want_p, _) in zip(planes, want):
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+
+def test_bwd_ops_dispatch():
+    from repro.kernels import ops
+    g, w8, a8, scal = _bwd_data(20, 24, 12)
+    for mode, kb in _BWD_MODES:
+        o = ops.dgrad_op(g, w8, scal, mode=mode, k=kb)
+        ok = ops.dgrad_op(g, w8, scal, mode=mode, k=kb, force_kernel=True)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(ok))
+        o = ops.wgrad_op(a8, g, scal, mode=mode, k=kb)
+        ok = ops.wgrad_op(a8, g, scal, mode=mode, k=kb, force_kernel=True)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(ok))
+
+
+# --------------------------------------------------------------------------
+# fused UBN kernel
+# --------------------------------------------------------------------------
+
+_UBN_W = dict(k_mu=16, k_sigma=16, k_bn=16, k_gamma=8, k_beta=8,
+              eps=2.0 ** -8)
+
+
+@pytest.mark.parametrize("m,n", [(16, 32), (33, 48), (100, 24), (1, 8),
+                                 (7, 130)])
+@pytest.mark.parametrize("kind", ["rms", "layer", "batch"])
+def test_ubn_sweep(m, n, kind):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, n)) * 0.5
+    gamma = jax.random.normal(jax.random.PRNGKey(1), (n,)) * 0.2 + 1.0
+    beta = (None if kind == "rms"
+            else jax.random.normal(jax.random.PRNGKey(2), (n,)) * 0.1)
+    got = ubn_norm(x, gamma, beta, kind=kind, bt=16, interpret=True,
+                   **_UBN_W)
+    want = ref.ubn_norm_ref(x, gamma, beta, kind=kind, **_UBN_W)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ubn_zero_rows_no_nan():
+    """Padded/degenerate rows (all zeros) must normalize to 0, not NaN."""
+    x = jnp.zeros((5, 16))
+    gamma = jnp.ones((16,))
+    for kind in ("rms", "layer", "batch"):
+        beta = None if kind == "rms" else jnp.zeros((16,))
+        y = ubn_norm(x, gamma, beta, kind=kind, bt=8, interpret=True,
+                     **_UBN_W)
+        assert not bool(jnp.isnan(y).any())
+        np.testing.assert_array_equal(np.asarray(y), 0.0)
+
+
+def test_ubn_ops_dispatch():
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.PRNGKey(0), (12, 20)) * 0.5
+    gamma = jnp.ones((20,))
+    for kind in ("rms", "layer", "batch"):
+        beta = None if kind == "rms" else jnp.zeros((20,))
+        o = ops.ubn_norm_op(x, gamma, beta, kind=kind)
+        ok = ops.ubn_norm_op(x, gamma, beta, kind=kind, force_kernel=True)
+        np.testing.assert_array_equal(np.asarray(o), np.asarray(ok))
+
+
+def test_dispatch_report_banner():
+    from repro.core import preset
+    from repro.kernels import ops
+    rep = ops.dispatch_report(preset("full8", "native"))
+    assert set(rep["ops"]) == set(ops.OPS) and len(ops.OPS) == 8
+    assert rep["fused"] is True and rep["mode"] == "native"
+    rep2 = ops.dispatch_report(
+        preset("full8", "native").replace(fuse_kernels=False))
+    assert rep2["fused"] is False
+    banner = ops.dispatch_banner(preset("full8", "native"))
+    assert "backend=" in banner and "bwd/ubn=fused" in banner
+    assert "route=" in ops.dispatch_banner()

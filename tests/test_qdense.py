@@ -102,3 +102,146 @@ def test_native_int8_residuals():
     qa, qb = res
     assert qa.data.dtype == jnp.int8 and qb.data.dtype == jnp.int8
     assert qa.carrier is None and qb.carrier is None
+
+
+# --------------------------------------------------------------------------
+# fused-prologue backward route (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["full8", "e2_16"])
+@pytest.mark.parametrize("e_kind", ["default", "sq8", "sq16", "flag8",
+                                    "none"])
+def test_native_fused_bwd_bit_exact(data, name, e_kind):
+    """Fused dgrad/wgrad (Q_E2 in the kernel prologue) must reproduce the
+    legacy quantize-then-contract backward bit-exactly for every e_kind."""
+    x, w = data
+    cfg_f = preset(name, "native")
+    cfg_u = cfg_f.replace(fuse_kernels=False)
+
+    def loss(cfg, x, w):
+        y = qeinsum(cfg, "mk,kn->mn", e_kind, True,
+                    qact(cfg, "relu", x), qweight(cfg, w))
+        return jnp.sum(y ** 2)
+
+    for argnum in (0, 1):
+        gf = jax.grad(lambda *a: loss(cfg_f, *a), argnums=argnum)(x, w)
+        gu = jax.grad(lambda *a: loss(cfg_u, *a), argnums=argnum)(x, w)
+        np.testing.assert_array_equal(np.asarray(gf), np.asarray(gu))
+
+
+def test_native_fused_bwd_falls_back_on_batched_spec():
+    """Non-canonical specs keep the unfused route (and still agree with
+    themselves under the fuse_kernels toggle)."""
+    cfg = preset("full8", "native")
+    a = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8, 4)) * 0.3
+    b = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 8, 4)) * 0.3
+    for c in (cfg, cfg.replace(fuse_kernels=False)):
+        g = jax.grad(lambda a: jnp.sum(
+            qeinsum(c, "bskd,btkd->bskt", "sq8", False, a, b) ** 2))(a)
+        assert g.shape == a.shape and not bool(jnp.isnan(g).any())
+
+
+from jaxpr_utils import collect_outside_pallas as _collect_outside_pallas
+
+
+def test_native_fused_bwd_jaxpr_no_standalone_quantize(monkeypatch):
+    """Acceptance: on the kernel route, the native backward contains NO
+    standalone fp32 amax/quantize pass between error quantization and the
+    matmuls — the only amax is the error quantizer's scale reduction
+    (shared by both dots), every tensor-shaped round/clip lives inside a
+    pallas_call, and every integer dot is a kernel (no XLA dot_general)."""
+    from repro.core.qtensor import QTensor
+    from repro.kernels import ops
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.1
+    xq = cfg.a.make().quantize(x)          # payload built BEFORE the patch
+
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+
+    def f(data, scale, w):
+        qa = QTensor(data, scale, 8).with_carrier()
+        y = qeinsum(cfg, "mk,kn->mn", "default", True, qa, qweight(cfg, w))
+        return jnp.sum(y)
+
+    jaxpr = jax.make_jaxpr(jax.grad(f, argnums=2))(xq.data, xq.scale, w)
+    prims = []
+    _collect_outside_pallas(jaxpr.jaxpr, prims)
+    names = [n for n, _ in prims]
+    # exactly one amax: the error quantizer's pow2 scale on the cotangent
+    assert names.count("reduce_max") == 1, names
+    # forward qmatmul + weight-payload quantize + fused dgrad + fused wgrad
+    assert names.count("pallas_call") >= 4, names
+    # no tensor-shaped rounding/saturation outside the kernels (scalar
+    # rounds — the pow2 scale — are the only ones allowed)
+    offenders = [(n, s) for n, s in prims
+                 if n in ("round", "clamp") and s not in (None, ())]
+    assert not offenders, offenders
+    # every matmul is a Pallas kernel
+    assert "dot_general" not in names, names
+
+
+@pytest.mark.parametrize("e2_kind", ["flag8", "sq8", "sq16"])
+def test_native_qconv_bwd_fused_toggle_bit_exact(e2_kind):
+    """_qconv_bwd's payload route (and the legacy-formula fallback it keeps
+    for multi-plane/wide formats) must match fuse_kernels=False exactly."""
+    from repro.core import qconv
+    cfg = preset("full8", "native").replace(e2_kind=e2_kind)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 4)) * 0.4
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6)) * 0.2
+    wq = qf.q_clip(w, 8)
+
+    def loss(c, t, v):
+        return jnp.sum(qconv(c, t, v, 1, "SAME") ** 2)
+
+    for argnum in (0, 1):
+        gf = jax.grad(lambda *a: loss(cfg, *a), argnums=argnum)(x, wq)
+        gu = jax.grad(
+            lambda *a: loss(cfg.replace(fuse_kernels=False), *a),
+            argnums=argnum)(x, wq)
+        np.testing.assert_array_equal(np.asarray(gf), np.asarray(gu))
+
+
+def test_qdense_requant_fused_emits_payload_directly():
+    """qdense_requant: the fused epilogue's int8 payload equals the
+    carrier-then-quantize fallback bit-exactly, and on the kernel route no
+    fp32 carrier or separate quantize exists outside the pallas_call."""
+    from repro.core import qdense_requant
+    from repro.kernels import ops
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 32)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.15
+    xq = qact(cfg, "relu", x)
+    step = 2.0 ** -7
+    qt_f = qdense_requant(cfg, xq, w, step)
+    qt_u = qdense_requant(cfg.replace(fuse_kernels=False), xq, w, step)
+    assert qt_f.data.dtype == jnp.int8 and qt_f.carrier is None
+    np.testing.assert_array_equal(np.asarray(qt_f.data),
+                                  np.asarray(qt_u.data))
+    # sim mode agrees on the represented value's grid too
+    qt_s = qdense_requant(preset("full8", "sim"), xq, w, step)
+    np.testing.assert_array_equal(np.asarray(qt_f.data),
+                                  np.asarray(qt_s.data))
+
+
+def test_qdense_requant_jaxpr_single_matmul_kernel(monkeypatch):
+    from repro.core import qdense_requant
+    from repro.core.qtensor import QTensor
+    from repro.kernels import ops
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 32)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.15
+    xq = cfg.a.make().quantize(x)
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: qdense_requant(cfg, a, b, 2.0 ** -7))(xq, w)
+    prims = []
+    _collect_outside_pallas(jaxpr.jaxpr, prims)
+    names = [n for n, _ in prims]
+    # weight-payload quantize + ONE fused matmul-with-epilogue kernel
+    assert names.count("pallas_call") == 2, names
+    assert "reduce_max" not in names, names
+    offenders = [(n, s) for n, s in prims
+                 if n in ("round", "clamp") and s not in (None, ())]
+    assert not offenders, offenders

@@ -61,3 +61,64 @@ def test_norm_simple_bwd_option():
     x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
     g = jax.grad(lambda t: jnp.sum(qrmsnorm(cfg, t, jnp.ones((64,)))))(x)
     assert not bool(jnp.isnan(g).any())
+
+
+# --------------------------------------------------------------------------
+# fused UBN route (native mode): bit-exact vs the sim composition
+# --------------------------------------------------------------------------
+
+
+def _norm_cases():
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 24)) * 0.7
+    gamma = jax.random.normal(jax.random.PRNGKey(2), (24,)) * 0.2 + 1.0
+    beta = jax.random.normal(jax.random.PRNGKey(3), (24,)) * 0.1
+    return [(qrmsnorm, (x, gamma)), (qlayernorm, (x, gamma, beta)),
+            (qbatchnorm, (x, gamma, beta))]
+
+
+def test_native_fused_norm_forward_bit_exact():
+    """Native mode routes norms through the fused UBN kernel op; its one-
+    pass output must equal the sim/unfused five-stage composition exactly."""
+    cfg_n, cfg_s = preset("full8", "native"), preset("full8", "sim")
+    cfg_u = cfg_n.replace(fuse_kernels=False)
+    for fn, args in _norm_cases():
+        yn, ys, yu = fn(cfg_n, *args), fn(cfg_s, *args), fn(cfg_u, *args)
+        np.testing.assert_array_equal(np.asarray(yn), np.asarray(ys))
+        np.testing.assert_array_equal(np.asarray(yn), np.asarray(yu))
+
+
+def test_native_fused_norm_grads_bit_exact():
+    cfg_n, cfg_u = preset("full8", "native"), \
+        preset("full8", "native").replace(fuse_kernels=False)
+    for fn, args in _norm_cases():
+        x, rest = args[0], args[1:]
+        gn = jax.grad(lambda t: jnp.sum(fn(cfg_n, t, *rest) ** 2))(x)
+        gu = jax.grad(lambda t: jnp.sum(fn(cfg_u, t, *rest) ** 2))(x)
+        np.testing.assert_array_equal(np.asarray(gn), np.asarray(gu))
+        # gamma grads too (STE through the direct quantizers)
+        gg_n = jax.grad(lambda g: jnp.sum(fn(cfg_n, x, g, *rest[1:]) ** 2))(
+            rest[0])
+        gg_u = jax.grad(lambda g: jnp.sum(fn(cfg_u, x, g, *rest[1:]) ** 2))(
+            rest[0])
+        np.testing.assert_array_equal(np.asarray(gg_n), np.asarray(gg_u))
+
+
+def test_native_fused_norm_jaxpr_single_kernel(monkeypatch):
+    """On the kernel route the whole forward is ONE pallas_call: no
+    standalone quantize (tensor-shaped round) outside it, and no amax at
+    all — every UBN quantizer has a fixed pow2 step."""
+    from jaxpr_utils import collect_outside_pallas
+
+    from repro.kernels import ops
+    cfg = preset("full8", "native")
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32))
+    gamma = jnp.ones((32,))
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    jaxpr = jax.make_jaxpr(lambda t: qrmsnorm(cfg, t, gamma))(x)
+    s = str(jaxpr)
+    assert s.count("pallas_call") >= 1
+    assert "reduce_max" not in s
+    prims = []
+    collect_outside_pallas(jaxpr.jaxpr, prims)
+    assert sum(1 for n, _ in prims if n == "pallas_call") == 1
+    assert not [n for n, shp in prims if n == "round" and shp != ()], prims
