@@ -80,6 +80,20 @@ def train_lm(qcfg: QConfig, steps: int, batch: int = 8, seq: int = 32,
             "wall_s": time.time() - t0, "params": params, "model": model}
 
 
+# rows emitted since the last take_records() — benchmarks.run snapshots
+# these into the append-style BENCH_<suite>.json trajectory files
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
     """The harness CSV contract: name,us_per_call,derived."""
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def take_records() -> list[dict]:
+    """Drain the emitted-row buffer (one suite's worth when called by the
+    benchmarks.run harness between suites)."""
+    out, RECORDS[:] = list(RECORDS), []
+    return out

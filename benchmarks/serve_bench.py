@@ -1,21 +1,87 @@
 """Serving benchmark: continuous-batching engine under open-loop Poisson
-traffic at several arrival rates, vs the sequential naive baseline.
+traffic at several arrival rates, vs the sequential naive baseline, plus
+the fused-vs-unfused decode comparison (mirroring train_bench's fused
+column: QConfig.fuse_kernels toggles the paged-attention route, bit-exact
+either way, so the delta isolates the page-gather traffic the fused kernel
+removes).
 
 CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
-  serve/rate<r>  — us per fused decode step; decode tok/s, mean/max TTFT,
-                   preemptions under rate r req/s
-  serve/naive    — us per decode step of one-request-at-a-time serving
-  serve/speedup  — engine-vs-naive aggregate decode tok/s ratio
-  serve/pool     — int8-vs-fp32 footprint ratio + resident-seq capacity
+  serve/rate<r>        — us per fused decode step; decode tok/s, mean/max
+                         TTFT, preemptions under rate r req/s
+  serve/naive          — us per decode step of one-request-at-a-time serving
+  serve/speedup        — engine-vs-naive aggregate decode tok/s ratio
+  serve/pool           — int8-vs-fp32 footprint ratio + resident-seq capacity
+  serve/fused_ctx<N>   — us per decode step at max_ctx=N, fused route
+  serve/unfused_ctx<N> — same engine load, gather-then-attend route
+  serve/decode_fusion  — fused-vs-unfused step-time ratio at the largest
+                         context config
+  serve/decode_path    — fused_active=True/False per route, from the
+                         decode-step jaxpr (CI fails on a silent fallback)
 
 Scale knobs: REPRO_BENCH_FAST halves the request count and drops the
-highest rate; the arch is the reduced granite-3-8b (CPU scale).
+highest rate + largest context; the arch is the reduced granite-3-8b (CPU
+scale).
 """
 from __future__ import annotations
 
 import os
 
 from .common import emit
+
+ARCH = "granite-3-8b"
+
+
+def _measure_decode(engine, n_lanes: int, prompt_len: int, max_new: int):
+    """Fill every lane, drain, and return (us per full-lane decode step,
+    steps measured) — deltas against the engine counters, so repeated
+    measurements never reset engine/watchdog state."""
+    import numpy as np
+
+    wall0, steps0 = engine.decode_wall_s, engine.decode_steps
+    for i in range(n_lanes):
+        engine.submit(np.arange(1 + i, prompt_len + 1 + i), max_new)
+    engine.drain()
+    steps = engine.decode_steps - steps0
+    return ((engine.decode_wall_s - wall0) / max(1, steps)) * 1e6, steps
+
+
+def _fused_vs_unfused(ctxs, fast: bool):
+    from repro.serving import fused_decode_active, make_engine
+
+    n_rep = 2 if fast else 3
+    ratio_at_largest = None
+    for i, ctx in enumerate(ctxs):
+        engines, us = {}, {}
+        for fused in (True, False):
+            eng = make_engine(ARCH, mode="native", fuse_kernels=fused,
+                              max_lanes=4, page_size=8, max_ctx=ctx)
+            active = fused_decode_active(eng)
+            if i == 0:      # route report once per polarity (CI greps it)
+                emit("serve/decode_path", 0.0,
+                     f"fuse_kernels={fused};fused_active={active}")
+            # a fused engine that silently took the gather route (or vice
+            # versa) invalidates the comparison — fail loudly
+            assert active == fused, (
+                f"silent decode-route fallback: fuse_kernels={fused} "
+                f"resolved to fused_active={active}")
+            eng.submit([1, 2, 3, 4], 2)       # warm prefill/decode traces
+            eng.drain()
+            engines[fused] = eng
+        # alternate routes, keep the min-of-n per route: back-to-back
+        # interleaving cancels machine drift that a single pass cannot
+        steps = 0
+        for _ in range(n_rep):
+            for fused, eng in engines.items():
+                t, steps = _measure_decode(eng, 4, 8, ctx - 16)
+                label = "fused" if fused else "unfused"
+                us[label] = min(us.get(label, t), t)
+        for fused in engines:
+            label = "fused" if fused else "unfused"
+            emit(f"serve/{label}_ctx{ctx}", us[label],
+                 f"steps={steps};reps={n_rep};fused_active={fused}")
+        ratio_at_largest = us["unfused"] / max(us["fused"], 1e-9)
+    emit("serve/decode_fusion", 0.0,
+         f"fused_vs_unfused={ratio_at_largest:.2f}x;ctx={ctxs[-1]}")
 
 
 def main():
@@ -24,15 +90,15 @@ def main():
     from repro.configs import get
     from repro.core import preset
     from repro.models import build_model
-    from repro.serving import Engine, naive_serve, poisson_traffic, run_load
+    from repro.serving import (Engine, naive_serve, poisson_traffic,
+                               run_load)
 
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     n_requests = 6 if fast else 12
     rates = (4.0, 16.0) if fast else (4.0, 16.0, 64.0)
     gen_lens = (4, 8) if fast else (4, 8, 12)
 
-    model = build_model(get("granite-3-8b").reduced(),
-                        preset("full8", "native"))
+    model = build_model(get(ARCH).reduced(), preset("full8", "native"))
     params = model.init(jax.random.PRNGKey(0))
 
     def traffic_at(rate):
@@ -66,6 +132,11 @@ def main():
              f"int8_vs_fp32={pool_rep['footprint_ratio']:.2f}x;"
              f"seqs_int8={pool_rep['capacity_seqs_int8']};"
              f"seqs_fp32={pool_rep['capacity_seqs_fp32']}")
+
+    # fused-vs-unfused decode column + the dispatch-route report (the fused
+    # engine must stream pages through the fused kernel and the unfused one
+    # must not — a silent fallback fails the bench, and CI greps the rows)
+    _fused_vs_unfused((32,) if fast else (32, 64), fast)
 
 
 if __name__ == "__main__":

@@ -94,10 +94,13 @@ class QConfig:
     tp_comm_dtype: str = "f32"
     # carrier dtype for the SSM scan intermediates ("f32" | "bf16")
     scan_dtype: str = "f32"
-    # native-mode fused kernels (DESIGN.md §8): route the backward error
-    # dots through the fused-prologue dgrad/wgrad ops and norms through the
-    # fused UBN op.  Bit-exact either way (benchmarks/train_bench.py flips
-    # this to measure the fusion win); sim mode ignores it.
+    # native-mode fused kernels (DESIGN.md §7/§8): route the backward error
+    # dots through the fused-prologue dgrad/wgrad ops, norms through the
+    # fused UBN op, the attention forward through the tiled flash kernel,
+    # and paged serving decode through the streaming paged-attention kernel
+    # (the gathered KV never exists in HBM).  Bit-exact either way
+    # (train_bench/serve_bench flip this to measure the fusion win); sim
+    # mode ignores it.
     fuse_kernels: bool = True
 
     # Per-path switches (paper Table II single-path sensitivity runs).

@@ -5,21 +5,26 @@ default execution path on CPU is the oracle (identical math); tests sweep
 the kernels in interpret mode against the oracles.  On a TPU backend the
 compiled kernels are selected automatically.
 
-The eight dispatched ops (DESIGN.md §8 maps them onto the paper's data
+The ten dispatched ops (DESIGN.md §8 maps them onto the paper's data
 paths):
 
-  qmatmul_op        — int8 x int8 -> int32 MAC, optional fused requantize
-                      epilogue emitting an int8 payload directly
-  quantize_op       — fused scale/round/clip payload emission (Q/SQ)
-  cq_op             — stochastic-rounding CQ payload (Eq. 7)
-  dgrad_op          — backward input-error dot e4 = W^T e3 with Q_E2 fused
-                      into the matmul prologue (Alg. 2)
-  wgrad_op          — backward weight-gradient dot g_W = e3 x0^T, same
-                      fused prologue
-  ubn_norm_op       — fused UBN: statistics + normalize + the five direct
-                      quantizers in one pass
-  page_gather_op    — paged int8 KV-cache gather (serving)
-  selective_scan_op — SSM recurrence (fp32 VPU over gridded inputs)
+  qmatmul_op         — int8 x int8 -> int32 MAC, optional fused requantize
+                       epilogue emitting an int8 payload directly
+  quantize_op        — fused scale/round/clip payload emission (Q/SQ)
+  cq_op              — stochastic-rounding CQ payload (Eq. 7)
+  dgrad_op           — backward input-error dot e4 = W^T e3 with Q_E2 fused
+                       into the matmul prologue (Alg. 2)
+  wgrad_op           — backward weight-gradient dot g_W = e3 x0^T, same
+                       fused prologue
+  ubn_norm_op        — fused UBN: statistics + normalize + the five direct
+                       quantizers in one pass
+  page_gather_op     — paged int8 KV-cache gather (defrag / tests; the
+                       decode hot loop streams pages via paged_attention_op)
+  paged_attention_op — fused paged decode attention: pages stream through
+                       VMEM, the gathered KV never exists in HBM (§7)
+  flash_attention_op — tiled online-softmax prefill/training attention on
+                       int8 payloads, per-chunk decompositions in-register
+  selective_scan_op  — SSM recurrence (fp32 VPU over gridded inputs)
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import jax.numpy as jnp
 from . import ref
 from .backward import bwd_dgrad, bwd_wgrad
 from .page_gather import page_gather
+from .paged_attention import flash_attention, paged_attention
 from .qmatmul import qmatmul
 from .quantize import cq_stochastic, quantize_fused
 from .selective_scan import selective_scan
@@ -201,6 +207,93 @@ def page_gather_op(pages, table, *, force_kernel=False):
     return ref.page_gather_ref(pages, table)
 
 
+# the decode score pass holds one lane's full (H, T) f32 score row in VMEM
+# scratch; the flash kernel holds full-batch (B, qc, H[, dh]) m/l/o blocks.
+# Shapes past these budgets lower through the XLA oracles instead (same
+# math), mirroring the UBN tile guard above.
+_ATTN_VMEM_BUDGET = 4 * 2 ** 20
+
+
+def paged_attention_fits(kvg: int, t: int) -> bool:
+    """Whether one lane's score row fits the decode kernel's VMEM scratch."""
+    return 4 * kvg * t <= _ATTN_VMEM_BUDGET
+
+
+def flash_attention_fits(b: int, qc: int, h: int, dh: int) -> bool:
+    """Whether the flash kernel's full-batch m/l/o scratch fits VMEM."""
+    return 4 * b * qc * h * (dh + 2) <= _ATTN_VMEM_BUDGET
+
+
+def paged_attention_op(q8, k_pages, v_pages, table, q_pos, t_valid,
+                       q_scale, k_scale, v_scale, *, sm_scale,
+                       k_a=8, force_kernel=False):
+    """Fused paged decode attention (the serving engine's decode hot loop).
+
+    Streams int8 K/V pages through VMEM via a scalar-prefetched page table
+    (two passes; the single probability amax lives between them as a scalar
+    reduction over the row sums — DESIGN.md §7) and writes only the
+    attention output: the gathered contiguous KV view never exists in HBM.
+
+    Args:
+      q8: (B, H, dh) int8 query payload (one decode token per lane);
+      k_pages/v_pages: (P, page, KV, dh) int8 physical page arenas;
+      table: (B, NB) int32 per-lane page ids (out-of-range ids clamp;
+      id 0 is the trash page dead lanes point at); q_pos: (B,) int32
+      per-lane positions; t_valid: scalar bound on valid positions;
+      q/k/v_scale: pow2 payload scales; sm_scale: 1/sqrt(dh); k_a: the
+      probability grid width.
+
+    Returns:
+      (B, H, dh) f32 pre-Q_A attention output, bit-exact against the
+      unfused page_gather + decode_attention path.
+    """
+    page = k_pages.shape[1]
+    fits = paged_attention_fits(q8.shape[1], table.shape[1] * page)
+    if (_on_tpu() or force_kernel) and fits:
+        return paged_attention(q8, k_pages, v_pages, table, q_pos, t_valid,
+                               q_scale, k_scale, v_scale, sm_scale=sm_scale,
+                               k_a=k_a, interpret=not _on_tpu())
+    return ref.paged_attention_ref(q8, k_pages, v_pages, table, q_pos,
+                                   t_valid, q_scale, k_scale, v_scale,
+                                   sm_scale=sm_scale, k_a=k_a)
+
+
+def flash_attention_op(q8, k8, v8, q_pos, k_pos, k_valid, q_scale, k_scale,
+                       v_scale, *, causal, sm_scale, q_chunk, kv_chunk,
+                       k_a=8, force_kernel=False):
+    """Tiled online-softmax attention on int8 payloads (prefill/training).
+
+    One (q-tile, kv-tile) grid cell per chunk pair; per-chunk GridQuantizer
+    decompositions run in-register over the full batch block, so the
+    output is bit-identical to the pure-JAX chunked online-softmax in
+    models/layers.py (including its saturate-at-pow2-amax corner).
+    Forward-only: the training backward stays on the unfused composition
+    (custom_vjp in models/layers.py), whose Q_E2 semantics are Alg. 2's.
+
+    Args:
+      q8: (B, S, H, dh) int8; k8/v8: (B, T, KV, dh) int8 — pre-padded to
+      chunk multiples with payload zeros; q_pos (S,) / k_pos (T,) int32;
+      k_valid: (T,) int mask of real kv slots; scales: pow2 payload
+      scales; causal: mask mode; sm_scale: 1/sqrt(dh); q_chunk/kv_chunk:
+      tile sizes (must divide S / T).
+
+    Returns:
+      (B, S, H, dh) f32 pre-Q_A output (padded rows included).
+    """
+    b, s, h, dh = q8.shape
+    fits = flash_attention_fits(b, min(q_chunk, s), h, dh)
+    if (_on_tpu() or force_kernel) and fits:
+        return flash_attention(q8, k8, v8, q_pos, k_pos, k_valid, q_scale,
+                               k_scale, v_scale, causal=causal,
+                               sm_scale=sm_scale, q_chunk=q_chunk,
+                               kv_chunk=kv_chunk, k_a=k_a,
+                               interpret=not _on_tpu())
+    return ref.flash_attention_ref(q8, k8, v8, q_pos, k_pos, k_valid,
+                                   q_scale, k_scale, v_scale, causal=causal,
+                                   sm_scale=sm_scale, q_chunk=q_chunk,
+                                   kv_chunk=kv_chunk, k_a=k_a)
+
+
 def selective_scan_op(a, b, c, *, force_kernel=False):
     """SSM selective-scan recurrence h_t = a_t h_{t-1} + b_t; y_t = c_t·h_t.
 
@@ -223,7 +316,7 @@ def selective_scan_op(a, b, c, *, force_kernel=False):
 # --------------------------------------------------------------------------
 
 OPS = ("qmatmul", "quantize", "cq", "dgrad", "wgrad", "ubn_norm",
-       "page_gather", "selective_scan")
+       "page_gather", "paged_attention", "flash_attention", "selective_scan")
 
 
 def dispatch_report(cfg=None) -> dict:
@@ -231,7 +324,7 @@ def dispatch_report(cfg=None) -> dict:
 
     Returns {"backend", "route" ("kernel" on TPU else "oracle"),
     "ops": {name: route}}; with a QConfig also "mode" and "fused" (whether
-    native mode routes backward/UBN through the fused ops).
+    native mode routes backward/UBN/attention through the fused ops).
     """
     route = "kernel" if _on_tpu() else "oracle"
     rep = {"backend": jax.default_backend(), "route": route,
@@ -244,10 +337,47 @@ def dispatch_report(cfg=None) -> dict:
 
 def dispatch_banner(cfg=None) -> str:
     """One-line startup banner, e.g.
-    '[kernels] backend=cpu route=oracle mode=native bwd/ubn=fused'."""
+    '[kernels] backend=cpu route=oracle mode=native bwd/ubn=fused
+    attn=fused'."""
     rep = dispatch_report(cfg)
     line = f"[kernels] backend={rep['backend']} route={rep['route']}"
     if cfg is not None:
         fused = "fused" if rep["fused"] else "unfused"
-        line += f" mode={rep['mode']} bwd/ubn={fused}"
+        line += f" mode={rep['mode']} bwd/ubn={fused} attn={fused}"
     return line
+
+
+def eqns_outside_pallas(jaxpr, out=None) -> list:
+    """(primitive name, out shape, out dtype) for every eqn reachable from
+    `jaxpr`, recursing through sub-jaxprs (pjit, scan, custom_vjp, ...) but
+    NOT into pallas_call bodies — those record as ("pallas_call", None,
+    None).
+
+    The fused-decode acceptance checks are phrased over this listing: a
+    dense gathered-KV-shaped int8 intermediate outside a pallas body means
+    the decode step took the gather-then-attend route instead of streaming
+    pages through the fused attention kernel.
+    """
+    if out is None:
+        out = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(("pallas_call", None, None))
+            continue
+        subs = []
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for vv in vs:
+                if hasattr(vv, "eqns"):
+                    subs.append(vv)
+                elif hasattr(vv, "jaxpr") and hasattr(vv.jaxpr, "eqns"):
+                    subs.append(vv.jaxpr)
+        if subs:
+            for sub in subs:
+                eqns_outside_pallas(sub, out)
+        else:
+            aval = eqn.outvars[0].aval if eqn.outvars else None
+            out.append((eqn.primitive.name,
+                        getattr(aval, "shape", ()),
+                        getattr(aval, "dtype", None)))
+    return out

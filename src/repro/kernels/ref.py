@@ -129,6 +129,149 @@ def page_gather_ref(pages: jax.Array, table: jax.Array) -> jax.Array:
     return pages[jnp.clip(table, 0, p - 1)]
 
 
+NEG_INF = -1e9   # the attention mask fill (models/layers.py uses the same)
+
+
+def _pow2_ceil(m):
+    """Smallest power of two >= m; 1 for m <= 0 (== core.qfuncs.pow2_ceil,
+    duplicated here because kernels/ must not import core/)."""
+    safe = jnp.where(m > 0, m, 1.0)
+    return jnp.where(m > 0, jnp.exp2(jnp.ceil(jnp.log2(safe))), 1.0)
+
+
+def _grid_decompose(x: jax.Array, k: int):
+    """GridQuantizer decomposition (core/qtensor.py): pow2_ceil(amax) scale
+    with a 2^-24 floor, payload clip(round(x/step), +-(2^(k-1)-1)) int8.
+    Returns (payload, step).  Bit-identical to _decompose + quantize_ref."""
+    s = jnp.maximum(_pow2_ceil(jnp.max(jnp.abs(x))), 2.0 ** -24)
+    step = s * 2.0 ** (1 - k)
+    lim = 2.0 ** (k - 1) - 1.0
+    p8 = jnp.clip(jnp.round(x * (jnp.float32(1.0) / step)), -lim,
+                  lim).astype(jnp.int8)
+    return p8, step
+
+
+def paged_attention_ref(q8: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        table: jax.Array, q_pos: jax.Array, t_valid,
+                        q_scale, k_scale, v_scale, *, sm_scale: float,
+                        k_a: int = 8) -> jax.Array:
+    """Fused paged decode attention oracle — operation-for-operation the
+    page_gather + decode_attention composition (models/layers.py), so the
+    fused op is bit-exact against the unfused path by construction.
+
+    q8: (B, H, dh) int8 query payload (one decode token per lane);
+    k_pages/v_pages: (P, page, KV, dh) int8 arenas; table: (B, NB) page
+    ids (0 = trash page); q_pos: (B,) int32 per-lane positions; t_valid:
+    scalar upper bound on valid positions; q/k/v_scale: pow2 payload
+    scales; sm_scale: 1/sqrt(dh).
+
+    Returns (B, H, dh) f32 — the pre-Q_A attention output.  The single
+    probability amax (GridQuantizer batch-global scale) lives here as a
+    scalar reduction, exactly where the unfused qeinsum puts it.
+    """
+    p = k_pages.shape[0]
+    page, kv, dh = k_pages.shape[1:]
+    b, nb = table.shape
+    g = q8.shape[1] // kv
+    tb = jnp.clip(table, 0, p - 1)
+    k8 = k_pages[tb].reshape(b, nb * page, kv, dh)
+    v8 = v_pages[tb].reshape(b, nb * page, kv, dh)
+    qr = q8.reshape(b, 1, kv, g, dh)
+    sc = jnp.einsum("bskgd,btkd->bskgt", qr, k8,
+                    preferred_element_type=jnp.int32).astype(jnp.float32) \
+        * (q_scale * k_scale)
+    sc = sc * sm_scale
+    t = nb * page
+    kp = jnp.arange(t)
+    mask = (kp[None, :] <= q_pos[:, None]) & (kp[None, :] < t_valid)
+    sc = jnp.where(mask[:, None, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    pex = jnp.exp(sc - m)
+    pn = pex / jnp.sum(pex, axis=-1, keepdims=True)
+    s_ = 2.0 ** (k_a - 1)
+    pg = jnp.round(pn * s_) / s_                       # qprobs (Q_A grid)
+    p8, step = _grid_decompose(pg, k_a)                # ONE batch-global amax
+    out = jnp.einsum("bskgt,btkd->bskgd", p8, v8,
+                     preferred_element_type=jnp.int32).astype(jnp.float32) \
+        * (step * v_scale)
+    return out.reshape(b, kv * g, dh)
+
+
+def flash_attention_ref(q8: jax.Array, k8: jax.Array, v8: jax.Array,
+                        q_pos: jax.Array, k_pos: jax.Array,
+                        k_valid: jax.Array, q_scale, k_scale, v_scale, *,
+                        causal: bool, sm_scale: float, q_chunk: int,
+                        kv_chunk: int, k_a: int = 8) -> jax.Array:
+    """Tiled online-softmax attention oracle on int8 payload operands.
+
+    Chunk-for-chunk the pure-JAX chunked_attention composition
+    (models/layers.py): scores and p·v run as integer dots with per-chunk
+    GridQuantizer decompositions (amax over the full (B, chunk, heads)
+    block — including the saturate-at-amax-pow2 corner), probabilities
+    quantize UNNORMALIZED onto the Q_A grid per kv step, and the online
+    rescale (m/l/alpha) runs in f32.  Bit-identical to the unfused path.
+
+    q8: (B, S, H, dh) int8; k8/v8: (B, T, KV, dh) int8 — all pre-padded to
+    chunk multiples (payload zeros); q_pos: (S,), k_pos: (T,) int32;
+    k_valid: (T,) mask of real (non-padded) kv slots; scales: pow2 payload
+    scales.  Returns (B, S, H, dh) f32 (padded rows included; the caller
+    slices and applies Q_A).  Control flow (lax.scan over kv chunks,
+    lax.map over q blocks) is structured exactly like the unfused body so
+    the two compile to the same program shape.
+    """
+    b, s, h, dh = q8.shape
+    t, kv = k8.shape[1], k8.shape[2]
+    g = h // kv
+    nq, nk = s // q_chunk, t // kv_chunk
+    qf = (q8.astype(jnp.float32) * q_scale).reshape(b, s, kv, g, dh)
+    kf = k8.astype(jnp.float32) * k_scale
+    vf = v8.astype(jnp.float32) * v_scale
+    s_ = 2.0 ** (k_a - 1)
+    kc = kf.reshape(b, nk, kv_chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(b, nk, kv_chunk, kv, dh).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(nk, kv_chunk)
+    kvc = (k_valid != 0).reshape(nk, kv_chunk)
+
+    def q_block(qi, qp):
+        qi8, q_step = _grid_decompose(qi, k_a)
+
+        def kv_step(carry, inp):
+            m, l, o = carry
+            ki, vi, kp, kval = inp
+            ki8, k_step = _grid_decompose(ki, k_a)
+            sc = jnp.einsum("bskgd,btkd->bskgt", qi8, ki8,
+                            preferred_element_type=jnp.int32) \
+                .astype(jnp.float32) * (q_step * k_step)
+            sc = sc * sm_scale
+            mask = kval[None, :] if not causal else (
+                (qp[:, None] >= kp[None, :]) & kval[None, :])
+            sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.round(p * s_) / s_             # qprobs, unnormalized
+            pi8, p_step = _grid_decompose(p, k_a)
+            vi8, v_step = _grid_decompose(vi, k_a)
+            pv = jnp.einsum("bskgt,btkd->bskgd", pi8, vi8,
+                            preferred_element_type=jnp.int32) \
+                .astype(jnp.float32) * (p_step * v_step)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            o = o * alpha[..., None] + pv
+            return (m_new, l, o), None
+
+        m0 = jnp.full(qi.shape[:-1], NEG_INF, jnp.float32)
+        l0 = jnp.zeros(qi.shape[:-1], jnp.float32)
+        o0 = jnp.zeros(qi.shape, jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                    (kc, vc, kpc, kvc))
+        return o / jnp.maximum(l, 1e-9)[..., None]
+
+    qb = qf.reshape(b, nq, q_chunk, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(nq, q_chunk)
+    out = jax.lax.map(lambda args: q_block(*args), (qb, qpb))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+
+
 def selective_scan_ref(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
     """h_t = a_t * h_{t-1} + b_t (h_0 = 0);  y_t = sum_n c_t[n] * h_t[:, n].
 

@@ -74,27 +74,32 @@ def make_serve_step(model):
     return serve_step
 
 
-def make_paged_decode_step(model, sampler, k_scale=None, v_scale=None):
+def make_paged_decode_step(model, sampler, k_scale=None, v_scale=None,
+                           key=None):
     """Fused continuous-batching decode step for the serving engine.
 
-    step(params, slots, k_pages, v_pages, table, tokens, key) ->
+    step(params, slots, k_pages, v_pages, table, tokens, ctr) ->
     (new_slots, new_k_pages, new_v_pages, tokens).  One trace serves every
     engine step: the lane batch is padded to max_lanes, pages/table drive
     the paged attention, and the sampler picks next tokens on device.
-    k_scale/v_scale are the pool's per-layer pow2 scales (closed over so
-    the engine can donate the page buffers without invalidating them).
+    k_scale/v_scale are the pool's per-layer pow2 scales and `key` the
+    base PRNG key — all closed over so the engine can donate the page
+    buffers, and so the per-step sampling key derives INSIDE the fused
+    trace (fold_in of `ctr`, the engine's sampling counter) instead of as
+    a separately dispatched host-side computation per step.
     For non-paged families (SSM) the page arrays pass through untouched.
     """
     paged = model.decode_state_spec()["kv_layers"] > 0
+    key = jax.random.PRNGKey(0) if key is None else key
 
-    def step(params, slots, k_pages, v_pages, table, tokens, key):
+    def step(params, slots, k_pages, v_pages, table, tokens, ctr):
         view = None
         if paged:
             view = {"k_pages": k_pages, "v_pages": v_pages,
                     "k_scale": k_scale, "v_scale": v_scale, "table": table}
         logits, new_slots, new_pages = model.paged_decode_step(
             params, slots, view, tokens)
-        toks = sampler(logits, key)
+        toks = sampler(logits, jax.random.fold_in(key, ctr))
         if paged:
             return new_slots, new_pages["k_pages"], new_pages["v_pages"], \
                 toks

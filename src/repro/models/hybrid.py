@@ -49,6 +49,8 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
         qh, kh, vh = (qact(cfg, "none", t) for t in (qh, kh, vh))
         ks, vs = cache["k_scale"], cache["v_scale"]
         if "k_pages" in cache:  # paged serving cache (this group's pages)
+            # fused paged-attention route inside paged_decode_attention
+            # (native + fuse_kernels); gather route otherwise
             kp, vp = cache["k_pages"], cache["v_pages"]
             table = cache["table"]
             kp = L.page_scatter_token(kp, table, pvec,

@@ -13,12 +13,14 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import (QTensor, qact, qdense, qeinsum, qprobs, qrmsnorm,
                         qlayernorm, qt_carrier)
 from repro.core import qfuncs as qf
 from repro.core.qconfig import QConfig
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -102,14 +104,45 @@ def _attn_out(cfg, p, v):
     return qeinsum(cfg, "bskgt,btkd->bskgd", cfg.e_attn, False, p, v)
 
 
+def _payload8(x) -> bool:
+    """Single-plane int8 QTensor with a differentiable carrier — what the
+    fused attention kernels consume."""
+    return (isinstance(x, QTensor) and x.lo is None
+            and x.data.dtype == jnp.int8 and x.carrier is not None)
+
+
 def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
                       causal: bool, q_pos: Array, k_pos: Array,
                       q_chunk: int = 1024, kv_chunk: int = 512) -> Array:
-    """Memory-efficient online-softmax attention (pure JAX flash-style).
+    """Memory-efficient online-softmax attention (flash-style).
 
     q: (B, S, H, dh) on the activation grid; k/v: (B, T, KV, dh).
     Returns (B, S, H, dh) normalized output on the activation grid.
+
+    Native mode with `cfg.fuse_kernels` routes the forward through the
+    tiled Pallas flash kernel (kernels/ops.flash_attention_op) — int8
+    payloads in, per-chunk decompositions in-register, bit-identical to
+    the pure-JAX path below — via custom_vjp whose backward is the vjp of
+    the unfused body (the per-chunk qeinsum Q_E2 semantics of Alg. 2 are
+    unchanged).  Everything else takes the pure-JAX chunked path.
     """
+    if (cfg.native and cfg.fuse_kernels
+            and all(map(_payload8, (q, k, v)))
+            and kops.flash_attention_fits(
+                q.shape[0], min(q_chunk, q.shape[1]), q.shape[2],
+                q.shape[3])):
+        out = _flash_fused(cfg, causal, min(q_chunk, q.shape[1]),
+                           min(kv_chunk, k.shape[1]), q, k, v, q_pos, k_pos)
+        return qact(cfg, "none", out)
+    return qact(cfg, "none", _chunked_core(
+        cfg, q, k, v, causal=causal, q_pos=q_pos, k_pos=k_pos,
+        q_chunk=q_chunk, kv_chunk=kv_chunk))
+
+
+def _chunked_core(cfg: QConfig, q, k, v, *, causal: bool, q_pos: Array,
+                  k_pos: Array, q_chunk: int, kv_chunk: int) -> Array:
+    """Pure-JAX online-softmax body (pre-Q_A output): the sim-mode path
+    and the fused route's vjp ground truth."""
     # the online-softmax rescale math + chunk padding/scanning run on the
     # fp32 grid carriers; QTensor inputs degrade here (differentiably) and
     # the per-chunk qeinsums re-enter the integer path
@@ -172,8 +205,60 @@ def chunked_attention(cfg: QConfig, q: Array, k: Array, v: Array, *,
     qpb = q_pos.reshape(nq, q_chunk)
     out = lax.map(lambda args: q_block(*args), (qb, qpb))
     out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
-    out = out[:, :s_orig]
-    return qact(cfg, "none", out)
+    return out[:, :s_orig]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash_fused(cfg: QConfig, causal: bool, q_chunk: int, kv_chunk: int,
+                 q: QTensor, k: QTensor, v: QTensor, q_pos: Array,
+                 k_pos: Array) -> Array:
+    """Fused-forward attention: pad payloads to chunk multiples and run the
+    tiled Pallas flash kernel.  Bit-identical to `_chunked_core` (the
+    kernel re-derives every per-chunk decomposition in-register)."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    sp, tp = -s % q_chunk, -t % kv_chunk
+    q8, k8, v8 = q.data, k.data, v.data
+    k_valid = jnp.ones((t,), jnp.int32)
+    if sp:
+        q8 = jnp.pad(q8, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, sp))
+    if tp:
+        k8 = jnp.pad(k8, ((0, 0), (0, tp), (0, 0), (0, 0)))
+        v8 = jnp.pad(v8, ((0, 0), (0, tp), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, tp))
+        k_valid = jnp.pad(k_valid, (0, tp))
+    out = kops.flash_attention_op(
+        q8, k8, v8, q_pos, k_pos, k_valid, q.scale, k.scale, v.scale,
+        causal=causal, sm_scale=1.0 / math.sqrt(dh), q_chunk=q_chunk,
+        kv_chunk=kv_chunk, k_a=cfg.k_a)
+    return out[:, :s]
+
+
+def _flash_fused_fwd(cfg, causal, q_chunk, kv_chunk, q, k, v, q_pos, k_pos):
+    out = _flash_fused(cfg, causal, q_chunk, kv_chunk, q, k, v, q_pos, k_pos)
+    # int8 payload residuals only — the carriers are re-derived in the bwd
+    return out, (q.drop_carrier(), k.drop_carrier(), v.drop_carrier(),
+                 q_pos, k_pos)
+
+
+def _flash_fused_bwd(cfg, causal, q_chunk, kv_chunk, res, ct):
+    # backward = vjp of the unfused chunked body (per-chunk qeinsums apply
+    # Q_E2 per Alg. 2); the fused forward is bit-identical to that body,
+    # so this IS the fused op's gradient
+    q, k, v, q_pos, k_pos = res
+    qw, kw, vw = (t.with_carrier() for t in (q, k, v))
+    _, vjp = jax.vjp(
+        lambda a, b, c: _chunked_core(cfg, a, b, c, causal=causal,
+                                      q_pos=q_pos, k_pos=k_pos,
+                                      q_chunk=q_chunk, kv_chunk=kv_chunk),
+        qw, kw, vw)
+    dq, dk, dv = vjp(ct)
+    zero = lambda x: np.zeros(np.shape(x), jax.dtypes.float0)  # noqa: E731
+    return dq, dk, dv, zero(q_pos), zero(k_pos)
+
+
+_flash_fused.defvjp(_flash_fused_fwd, _flash_fused_bwd)
 
 
 def decode_attention(cfg: QConfig, q, k, v, *,
@@ -206,13 +291,27 @@ def paged_decode_attention(cfg: QConfig, q, k_pages, v_pages, table, k_scale,
 
     k_pages/v_pages: (P, page, KV, dh) int8 physical pages; table: (B, NB)
     per-lane page table (logical block -> physical page id, 0 = trash page).
-    The gather stays int8 end to end: pages become a contiguous per-lane
-    payload view that feeds the integer dots as QTensors — the paged cache
-    is never dequantized or concatenated in fp32.
+
+    Native mode with `cfg.fuse_kernels` takes the FUSED route
+    (kernels/ops.paged_attention_op): int8 K/V pages stream through VMEM
+    behind the scalar-prefetched table and the gathered contiguous KV view
+    never exists in HBM — bit-exact against the gather route below, which
+    remains for sim mode / non-QTensor queries (and defrag/tests keep the
+    standalone page_gather kernel).  Either way everything stays int8 end
+    to end: the paged cache is never dequantized or concatenated in fp32.
     """
+    b, s, h, dh = q.shape
+    if (cfg.native and cfg.fuse_kernels and s == 1 and _payload8(q)
+            and kops.paged_attention_fits(h, table.shape[1]
+                                          * k_pages.shape[1])):
+        out = kops.paged_attention_op(
+            q.data.reshape(b, h, dh), k_pages, v_pages, table, q_pos,
+            t_valid, q.scale, k_scale, v_scale,
+            sm_scale=1.0 / math.sqrt(dh), k_a=cfg.k_a)
+        return qact(cfg, "none", out.reshape(b, s, h, dh))
     from repro.kernels.ops import page_gather_op
     page = k_pages.shape[1]
-    b, nb = table.shape
+    nb = table.shape[1]
     k8 = page_gather_op(k_pages, table).reshape(
         b, nb * page, *k_pages.shape[2:])
     v8 = page_gather_op(v_pages, table).reshape(

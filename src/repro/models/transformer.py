@@ -122,6 +122,9 @@ class LMTransformer:
             qh, kh, vh = (qact(q, "none", t) for t in (qh, kh, vh))
             ks, vs = cache["k_scale"], cache["v_scale"]
             if "k_pages" in cache:  # paged serving cache (one layer's pages)
+                # native + fuse_kernels streams these pages through the
+                # fused paged-attention kernel inside paged_decode_attention
+                # (no gathered KV in HBM); sim mode takes the gather route
                 kp, vp = cache["k_pages"], cache["v_pages"]
                 table = cache["table"]
                 kp = L.page_scatter_token(kp, table, pvec,

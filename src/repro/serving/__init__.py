@@ -9,13 +9,15 @@ Layout (DESIGN.md §7):
                  per-request metrics, StepWatchdog wiring
   api.py       — make_engine + poisson_traffic/run_load/naive_serve
 """
-from .engine import Engine, greedy_token, make_sampler
+from .engine import (Engine, fused_decode_active, greedy_token,
+                     make_sampler)
 from .pool import PagePool
 from .scheduler import Request, RequestState, Scheduler
 from .api import make_engine, naive_serve, poisson_traffic, run_load
 
 __all__ = [
-    "Engine", "greedy_token", "make_sampler", "PagePool", "Request",
+    "Engine", "fused_decode_active", "greedy_token", "make_sampler",
+    "PagePool", "Request",
     "RequestState", "Scheduler", "make_engine", "naive_serve",
     "poisson_traffic", "run_load",
 ]

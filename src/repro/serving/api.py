@@ -26,9 +26,12 @@ from .engine import Engine, greedy_token
 
 
 def make_engine(arch: str, *, mode: str = "native", preset_name: str = "full8",
-                reduced: bool = True, seed: int = 0, **engine_kw) -> Engine:
+                reduced: bool = True, seed: int = 0,
+                fuse_kernels: bool = True, **engine_kw) -> Engine:
     """Build (arch config, params, Engine) in one call; returns the Engine
-    with `.model`/`.params` attached for callers that need them."""
+    with `.model`/`.params` attached for callers that need them.
+    `fuse_kernels=False` pins the unfused gather-then-attend decode route
+    (bit-exact either way; the serve bench times both)."""
     from repro.configs import get
     from repro.core import preset
     from repro.models import build_model
@@ -36,7 +39,8 @@ def make_engine(arch: str, *, mode: str = "native", preset_name: str = "full8",
     acfg = get(arch)
     if reduced:
         acfg = acfg.reduced()
-    model = build_model(acfg, preset(preset_name, mode))
+    model = build_model(acfg, preset(preset_name, mode)
+                        .replace(fuse_kernels=fuse_kernels))
     params = model.init(jax.random.PRNGKey(seed))
     return Engine(model, params, **engine_kw)
 

@@ -20,6 +20,12 @@ Per-step flow (Engine.step):
   3. one fused decode step over all lanes; append sampled tokens
   4. retire finished requests, free their pages
 
+The decode loop performs exactly ONE jitted device computation per step
+(asserted by tests/test_serving.py): the sampling key derives inside the
+fused trace (fold_in of a host counter), the device page table re-uploads
+only when the host copy changed, and the single host sync per step is the
+sampled-token readback.
+
 A `StepWatchdog` (runtime/fault.py) times every fused decode step; flagged
 stragglers are logged and surface in `metrics()["straggler_steps"]`.
 """
@@ -115,6 +121,7 @@ class Engine:
         self.max_lanes = max_lanes
         self.lane_req: list[Request | None] = [None] * max_lanes
         self.table = np.zeros((max_lanes, self.n_blocks), np.int32)
+        self._table_dev = None          # device mirror, rebuilt when dirty
         self.h_tokens = np.zeros((max_lanes,), np.int32)
         self.slots = model.init_slots(max_lanes)
         self._dense_axes = spec["dense_axes"]
@@ -122,12 +129,17 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self._sample_ctr = 0
         sampler = make_sampler(model.a.vocab, temperature, top_k)
-        self._sample_jit = jax.jit(sampler)
+        # prefill sampling: the fold_in runs inside the jit, keyed by the
+        # host counter — same key stream, one dispatch
+        self._sample_jit = jax.jit(
+            lambda logits, ctr: sampler(logits,
+                                        jax.random.fold_in(self.key, ctr)))
         scales = ((self.pool.k_scale, self.pool.v_scale)
                   if self.paged else (None, None))
-        self._decode_jit = jax.jit(
-            make_paged_decode_step(model, sampler, *scales),
-            donate_argnums=(1, 2, 3))
+        self._decode_step = make_paged_decode_step(model, sampler, *scales,
+                                                   key=self.key)
+        self._decode_jit = jax.jit(self._decode_step,
+                                   donate_argnums=(1, 2, 3))
         if self.paged:
             prefill = lambda p, t, n: model.prefill(p, t, n)  # noqa: E731
         else:
@@ -255,8 +267,9 @@ class Engine:
                                          v_req.reshape(shp))
             self.table[lane] = 0
             self.table[lane, :nb] = req.page_ids
+            self._table_dev = None
 
-        tok0 = int(self._sample_jit(logits, self._next_key())[0])
+        tok0 = int(self._sample_jit(logits, self._next_ctr())[0])
         req.generated.append(tok0)
         if req.ttft is None:
             req.ttft = self.clock() - req.arrival
@@ -271,6 +284,7 @@ class Engine:
         if req.lane >= 0:
             self.table[req.lane] = 0
             self.lane_req[req.lane] = None
+            self._table_dev = None
         req.page_ids = []
         req.lane = -1
 
@@ -298,6 +312,7 @@ class Engine:
             if pid is None:          # this lane itself was preempted
                 continue
             self.table[lane, blk] = pid[0]
+            self._table_dev = None
             req.page_ids.extend(pid)
 
     # ---- fused decode ----------------------------------------------------
@@ -313,17 +328,22 @@ class Engine:
         else:       # distinct dummies: donated args must not alias
             kp = jnp.zeros((0,), jnp.int8)
             vp = jnp.zeros((0,), jnp.int8)
+        if self._table_dev is None:     # re-upload only when tables changed
+            self._table_dev = jnp.asarray(self.table)
         new_slots, new_k, new_v, toks = self._decode_jit(
-            self.params, slots, kp, vp, jnp.asarray(self.table),
-            jnp.asarray(self.h_tokens), self._next_key())
+            self.params, slots, kp, vp, self._table_dev,
+            jnp.asarray(self.h_tokens), self._next_ctr())
         self.slots = new_slots
         if self.paged:
             self.pool.k, self.pool.v = new_k, new_v
+        # THE one host-device sync of the decode loop: the token readback
         return np.asarray(toks)
 
-    def _next_key(self):
+    def _next_ctr(self) -> np.int32:
+        """Sampling-counter tick: the PRNG fold_in happens inside the jitted
+        computations (same key stream as the legacy host-side fold)."""
         self._sample_ctr += 1
-        return jax.random.fold_in(self.key, self._sample_ctr)
+        return np.int32(self._sample_ctr)
 
     # ---- maintenance / metrics -------------------------------------------
 
@@ -337,10 +357,32 @@ class Engine:
             for old, new in mapping.items():
                 trans[old] = new
             self.table = trans[self.table].astype(np.int32)
+            self._table_dev = None
             for req in self.lane_req:
                 if req is not None:
                     req.page_ids = [int(trans[p]) for p in req.page_ids]
         return len(mapping)
+
+    def decode_jaxpr(self):
+        """jaxpr of the fused decode step at this engine's exact shapes
+        (introspection for tests / the serve bench's fusion check).
+
+        Traces through a fresh wrapper so the inspection trace never
+        shares jax's tracing cache with the live `_decode_jit` — callers
+        (fused_decode_active) retrace under a patched dispatch, and a
+        shared cache would hand the engine a kernel-route trace it cannot
+        compile on CPU (or hand the caller the stale oracle-route one).
+        """
+        slots = dict(self.slots, pos=jnp.zeros((self.max_lanes,), jnp.int32))
+        if self.paged:
+            kp, vp = self.pool.k, self.pool.v
+        else:
+            kp = jnp.zeros((0,), jnp.int8)
+            vp = jnp.zeros((0,), jnp.int8)
+        fresh = lambda *a: self._decode_step(*a)  # noqa: E731
+        return jax.make_jaxpr(fresh)(
+            self.params, slots, kp, vp, jnp.asarray(self.table),
+            jnp.asarray(self.h_tokens), np.int32(0))
 
     def metrics(self) -> dict:
         """Engine aggregates + per-request rollups.
@@ -389,3 +431,36 @@ def _write_dense(slots, axes, lane, vals):
 def _scatter_pages(pages, pids, chunk):
     """pages (L, P, page, KV, dh) <- chunk (L, nb, page, KV, dh) at pids."""
     return pages.at[:, pids].set(chunk)
+
+
+def fused_decode_active(engine: Engine) -> bool:
+    """Whether the engine's decode step streams KV pages through the fused
+    paged-attention kernel (True) or fell back to gather-then-attend
+    (False, e.g. sim mode or `fuse_kernels=False`).
+
+    Decided from the decode-step jaxpr with the kernel dispatch forced, so
+    the route is visible regardless of backend (the CPU oracle of the
+    fused op gathers internally, which would otherwise mask it): the
+    gather route materializes a dense per-lane KV view — an int8
+    intermediate of shape (B, NB, page, KV, dh) / (B, NB*page, KV, dh)
+    outside any pallas body — while the fused route never does.
+    `benchmarks/serve_bench.py` reports this and CI fails on a silent
+    fallback.
+    """
+    from repro.kernels import ops
+    if not engine.paged:
+        return False
+    spec = engine.model.decode_state_spec()
+    kv, dh = spec["n_kv"], spec["dh"]
+    b, nb, page = engine.max_lanes, engine.n_blocks, engine.page_size
+    dense = {(b, nb, page, kv, dh), (b, nb * page, kv, dh)}
+    orig = ops._on_tpu
+    ops._on_tpu = lambda: True
+    try:
+        jaxpr = engine.decode_jaxpr()
+    finally:
+        ops._on_tpu = orig
+    for _, shape, dtype in ops.eqns_outside_pallas(jaxpr.jaxpr):
+        if shape in dense and dtype == jnp.int8:
+            return False
+    return True

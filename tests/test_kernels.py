@@ -279,11 +279,237 @@ def test_dispatch_report_banner():
     from repro.core import preset
     from repro.kernels import ops
     rep = ops.dispatch_report(preset("full8", "native"))
-    assert set(rep["ops"]) == set(ops.OPS) and len(ops.OPS) == 8
+    assert set(rep["ops"]) == set(ops.OPS) and len(ops.OPS) == 10
+    assert {"paged_attention", "flash_attention"} <= set(rep["ops"])
     assert rep["fused"] is True and rep["mode"] == "native"
     rep2 = ops.dispatch_report(
         preset("full8", "native").replace(fuse_kernels=False))
     assert rep2["fused"] is False
     banner = ops.dispatch_banner(preset("full8", "native"))
     assert "backend=" in banner and "bwd/ubn=fused" in banner
+    assert "attn=fused" in banner
     assert "route=" in ops.dispatch_banner()
+
+
+# --------------------------------------------------------------------------
+# fused paged decode attention / flash attention
+# --------------------------------------------------------------------------
+
+
+def _paged_case(p, page, kv, g, dh, b, nb, seed=0):
+    """Pages + a table exercising dead lanes (trash page 0), multi-page
+    contexts crossing page boundaries, and ragged last pages."""
+    r = np.random.default_rng(seed)
+    kp = jnp.asarray(r.integers(-127, 128, (p, page, kv, dh)), jnp.int8)
+    vp = jnp.asarray(r.integers(-127, 128, (p, page, kv, dh)), jnp.int8)
+    q8 = jnp.asarray(r.integers(-127, 128, (b, kv * g, dh)), jnp.int8)
+    table = np.zeros((b, nb), np.int32)
+    q_pos = np.zeros((b,), np.int32)
+    ids = list(range(1, p))
+    for lane in range(1, b):                 # lane 0 stays dead
+        n_blk = 1 + (lane % nb)
+        take, ids = ids[:n_blk], ids[n_blk:] + ids[:n_blk]
+        table[lane, :n_blk] = take
+        q_pos[lane] = n_blk * page - 1 - (lane % page)   # ragged last page
+    t_valid = int(q_pos.max()) + 1
+    return q8, kp, vp, jnp.asarray(table), jnp.asarray(q_pos), t_valid
+
+
+@pytest.mark.parametrize("p,page,kv,g,dh,b,nb", [
+    (9, 4, 1, 1, 8, 2, 2),        # minimal
+    (9, 4, 2, 2, 8, 3, 4),        # GQA, multi-page
+    (17, 8, 2, 4, 16, 4, 3),      # wider GQA groups, bigger pages
+    (9, 4, 4, 1, 8, 2, 2),        # MHA (g == 1)
+    (5, 4, 2, 2, 8, 1, 1),        # single grid cell; every lane dead
+])
+def test_paged_attention_kernel_sweep(p, page, kv, g, dh, b, nb):
+    from repro.kernels.paged_attention import paged_attention
+    q8, kp, vp, table, q_pos, t_valid = _paged_case(p, page, kv, g, dh,
+                                                    b, nb)
+    scal = (jnp.float32(2 ** -6), jnp.float32(2 ** -7), jnp.float32(2 ** -7))
+    sm = 1.0 / float(np.sqrt(dh))
+    want = ref.paged_attention_ref(q8, kp, vp, table, q_pos, t_valid, *scal,
+                                   sm_scale=sm)
+    got = paged_attention(q8, kp, vp, table, q_pos, t_valid, *scal,
+                          sm_scale=sm, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_paged_attention_op_dispatch():
+    from repro.kernels import ops
+    q8, kp, vp, table, q_pos, t_valid = _paged_case(9, 4, 2, 2, 8, 3, 4)
+    scal = (jnp.float32(2 ** -6), jnp.float32(2 ** -7), jnp.float32(2 ** -7))
+    sm = 1.0 / float(np.sqrt(8))
+    o = ops.paged_attention_op(q8, kp, vp, table, q_pos, t_valid, *scal,
+                               sm_scale=sm)
+    ok = ops.paged_attention_op(q8, kp, vp, table, q_pos, t_valid, *scal,
+                                sm_scale=sm, force_kernel=True)
+    np.testing.assert_array_equal(np.asarray(o), np.asarray(ok))
+    assert o.shape == (3, 4, 8) and o.dtype == jnp.float32
+
+
+def test_paged_attention_out_of_range_table_clamps():
+    from repro.kernels.paged_attention import paged_attention
+    q8, kp, vp, table, q_pos, t_valid = _paged_case(9, 4, 2, 1, 8, 2, 2)
+    bad = table.at[1, 0].set(99)          # clamps to the last page
+    scal = (jnp.float32(2 ** -6), jnp.float32(2 ** -7), jnp.float32(2 ** -7))
+    sm = 1.0 / float(np.sqrt(8))
+    want = ref.paged_attention_ref(q8, kp, vp, bad, q_pos, t_valid, *scal,
+                                   sm_scale=sm)
+    got = paged_attention(q8, kp, vp, bad, q_pos, t_valid, *scal,
+                          sm_scale=sm, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_paged_decode_attention_fused_bitexact_vs_gather_route():
+    """The model-layer gate: fused streaming route == the page_gather +
+    decode_attention composition, bit for bit (same qact epilogue)."""
+    from repro.core import preset
+    from repro.core.qtensor import QTensor, qt_carrier
+    from repro.models import layers as L
+    q8, kp, vp, table, q_pos, t_valid = _paged_case(9, 4, 2, 2, 8, 3, 4)
+    b, h, dh = q8.shape
+    qt = QTensor(q8.reshape(b, 1, h, dh), jnp.float32(2 ** -6), 8,
+                 carrier=None)
+    qt = qt.with_carrier()
+    ks, vs = jnp.float32(2 ** -7), jnp.float32(2 ** -7)
+
+    def run(fused):
+        cfg = preset("full8", "native").replace(fuse_kernels=fused)
+        out = L.paged_decode_attention(cfg, qt, kp, vp, table, ks, vs,
+                                       q_pos=q_pos,
+                                       t_valid=jnp.int32(t_valid))
+        return np.asarray(qt_carrier(out))
+
+    np.testing.assert_array_equal(run(True), run(False))
+
+
+@pytest.mark.parametrize("b,s,kv,g,dh,qc,kc", [
+    (1, 8, 1, 1, 8, 4, 4),
+    (2, 13, 2, 3, 8, 4, 4),       # ragged + GQA
+    (2, 16, 2, 2, 16, 8, 4),      # uneven tile sizes
+])
+def test_flash_attention_kernel_sweep(b, s, kv, g, dh, qc, kc):
+    """Kernel vs oracle on payload inputs.  The comparison is allclose at
+    ulp scale (not array_equal): the online-rescale mul+add chains are
+    subject to XLA FMA contraction, which interpret-mode Pallas and the
+    eagerly-structured oracle may apply differently.  The model-level
+    route (CPU dispatch -> oracle) is bit-exact vs the unfused path —
+    asserted below."""
+    from repro.kernels.paged_attention import flash_attention
+    r = np.random.default_rng(3)
+    h = kv * g
+    q8 = jnp.asarray(r.integers(-127, 128, (b, s, h, dh)), jnp.int8)
+    k8 = jnp.asarray(r.integers(-127, 128, (b, s, kv, dh)), jnp.int8)
+    v8 = jnp.asarray(r.integers(-127, 128, (b, s, kv, dh)), jnp.int8)
+    sp, tp = -s % qc, -s % kc
+    q8 = jnp.pad(q8, ((0, 0), (0, sp), (0, 0), (0, 0)))
+    k8 = jnp.pad(k8, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    v8 = jnp.pad(v8, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    pos = jnp.arange(s)
+    qp, kp = jnp.pad(pos, (0, sp)), jnp.pad(pos, (0, tp))
+    kval = jnp.pad(jnp.ones((s,), jnp.int32), (0, tp))
+    scal = (jnp.float32(2 ** -7),) * 3
+    kw = dict(causal=True, sm_scale=1.0 / float(np.sqrt(dh)), q_chunk=qc,
+              kv_chunk=kc)
+    want = ref.flash_attention_ref(q8, k8, v8, qp, kp, kval, *scal, **kw)
+    got = flash_attention(q8, k8, v8, qp, kp, kval, *scal, **kw,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-6, atol=2e-7)
+
+
+def test_flash_attention_noncausal_matches_ref():
+    from repro.kernels.paged_attention import flash_attention
+    r = np.random.default_rng(5)
+    b, s, kv, g, dh = 2, 8, 2, 1, 8
+    q8 = jnp.asarray(r.integers(-127, 128, (b, s, kv * g, dh)), jnp.int8)
+    k8 = jnp.asarray(r.integers(-127, 128, (b, s, kv, dh)), jnp.int8)
+    v8 = jnp.asarray(r.integers(-127, 128, (b, s, kv, dh)), jnp.int8)
+    pos = jnp.arange(s)
+    kval = jnp.ones((s,), jnp.int32)
+    scal = (jnp.float32(2 ** -7),) * 3
+    kw = dict(causal=False, sm_scale=1.0 / float(np.sqrt(dh)), q_chunk=4,
+              kv_chunk=4)
+    want = ref.flash_attention_ref(q8, k8, v8, pos, pos, kval, *scal, **kw)
+    got = flash_attention(q8, k8, v8, pos, pos, kval, *scal, **kw,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-6, atol=2e-7)
+
+
+def test_chunked_attention_fused_bitexact_and_grads():
+    """Fused flash forward == unfused pure-JAX chunked path bitwise (under
+    jit, the way models run it); gradients agree because the fused bwd IS
+    the vjp of the unfused body."""
+    from repro.core import preset, qact
+    from repro.core.qtensor import qt_carrier
+    from repro.models import layers as L
+    r = np.random.default_rng(7)
+    b, s, kv, g, dh = 2, 13, 2, 3, 8
+    h = kv * g
+    x = jnp.asarray(r.normal(size=(b, s, h, dh)), jnp.float32) * 0.3
+    kx = jnp.asarray(r.normal(size=(b, s, kv, dh)), jnp.float32) * 0.3
+    vx = jnp.asarray(r.normal(size=(b, s, kv, dh)), jnp.float32) * 0.3
+    pos = jnp.arange(s)
+
+    def run(fused, inputs):
+        cfg = preset("full8", "native").replace(fuse_kernels=fused)
+
+        def f(x, kx, vx):
+            q, k, v = (qact(cfg, "none", t) for t in (x, kx, vx))
+            out = L.chunked_attention(cfg, q, k, v, causal=True, q_pos=pos,
+                                      k_pos=pos, q_chunk=4, kv_chunk=4)
+            return jnp.sum(qt_carrier(out) ** 2)
+
+        val, grads = jax.jit(jax.value_and_grad(f, argnums=(0, 1, 2)))(
+            *inputs)
+        return val, grads
+
+    vf, gf = run(True, (x, kx, vx))
+    vu, gu = run(False, (x, kx, vx))
+    assert np.asarray(vf) == np.asarray(vu)
+    for a, b_ in zip(gf, gu):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_fused_decode_jaxpr_streams_pages():
+    """Acceptance: with the kernel dispatch forced, the fused decode trace
+    contains NO standalone page-gather result and NO dense (B, T, ...) KV
+    intermediate outside a pallas body — the gathered cache never exists.
+    The unfused trace (contrast) does contain it."""
+    from repro.core import preset
+    from repro.core.qtensor import QTensor
+    from repro.kernels import ops
+    from repro.models import layers as L
+    q8, kp, vp, table, q_pos, t_valid = _paged_case(9, 4, 2, 2, 8, 3, 4)
+    b, h, dh = q8.shape
+    page, kv = kp.shape[1], kp.shape[2]
+    nb = table.shape[1]
+    qt = QTensor(q8.reshape(b, 1, h, dh), jnp.float32(2 ** -6), 8)
+    qt = qt.with_carrier()
+    ks, vs = jnp.float32(2 ** -7), jnp.float32(2 ** -7)
+    dense = {(b, nb, page, kv, dh), (b, nb * page, kv, dh)}
+
+    def trace(fused):
+        cfg = preset("full8", "native").replace(fuse_kernels=fused)
+        orig = ops._on_tpu
+        ops._on_tpu = lambda: True
+        try:
+            return jax.make_jaxpr(
+                lambda q: L.paged_decode_attention(
+                    cfg, q, kp, vp, table, ks, vs, q_pos=q_pos,
+                    t_valid=jnp.int32(t_valid)))(qt)
+        finally:
+            ops._on_tpu = orig
+
+    def dense_kv(jaxpr):
+        return [e for e in ops.eqns_outside_pallas(jaxpr.jaxpr)
+                if e[1] in dense and e[2] == jnp.int8]
+
+    fused = trace(True)
+    assert not dense_kv(fused)
+    assert sum(e[0] == "pallas_call"
+               for e in ops.eqns_outside_pallas(fused.jaxpr)) >= 2  # 2 passes
+    assert dense_kv(trace(False))       # contrast: gather route has it

@@ -10,8 +10,9 @@ from repro.configs import get
 from repro.core import preset
 from repro.models import build_model
 from repro.runtime.fault import StepWatchdog
-from repro.serving import (Engine, PagePool, RequestState, greedy_token,
-                           make_engine, make_sampler, poisson_traffic)
+from repro.serving import (Engine, PagePool, RequestState,
+                           fused_decode_active, greedy_token, make_engine,
+                           make_sampler, poisson_traffic)
 
 
 # --------------------------------------------------------------------------
@@ -234,6 +235,66 @@ def test_engine_watchdog_surfaces_stragglers():
     eng.drain()
     assert len(wd.times) == eng.decode_steps == 5
     assert eng.metrics()["straggler_steps"] == len(wd.flags) > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "granite-moe-1b-a400m",
+                                  "zamba2-7b"])
+def test_fused_decode_bitexact_vs_unfused(arch):
+    """Acceptance: the fused paged-attention decode greedy-decodes EXACTLY
+    the tokens of the gather-then-attend route, per model family, and the
+    jaxpr-level route check agrees with the QConfig toggle."""
+    outs = {}
+    for fused in (True, False):
+        eng = make_engine(arch, mode="native", fuse_kernels=fused,
+                          max_lanes=2, page_size=4, max_ctx=32)
+        assert fused_decode_active(eng) is fused
+        rids = [eng.submit(p, 6) for p in PROMPTS]
+        res = eng.drain()
+        outs[fused] = [res[r] for r in rids]
+    assert outs[True] == outs[False], arch
+
+
+def test_decode_loop_single_fused_computation_per_step():
+    """The decode hot loop is one jitted computation per step: a single
+    trace overall (jit-stable across occupancy changes) and exactly one
+    _decode_jit call per engine step; prefill-time sampling never runs
+    inside the decode loop."""
+    eng = make_engine("granite-3-8b", mode="native", max_lanes=2,
+                      page_size=4, max_ctx=32)
+    decode_calls = []
+    sample_calls = []
+    real_decode, real_sample = eng._decode_jit, eng._sample_jit
+    eng._decode_jit = lambda *a, **k: (decode_calls.append(1)
+                                       or real_decode(*a, **k))
+    eng._sample_jit = lambda *a, **k: (sample_calls.append(1)
+                                       or real_sample(*a, **k))
+    eng.submit(np.arange(1, 9), 8)
+    eng.step(); eng.step()
+    eng.submit(np.arange(2, 12), 6)          # occupancy changes mid-run
+    eng.drain()
+    decode_steps = eng.decode_steps
+    assert len(decode_calls) == decode_steps      # one call per step
+    assert len(sample_calls) == 2                 # one per ADMISSION only
+    assert real_decode._cache_size() == 1         # one trace overall
+
+
+def test_engine_table_mirror_invalidation():
+    """The device page-table mirror re-uploads only when the host table
+    changes (admission, page growth, release, defrag)."""
+    eng = make_engine("granite-3-8b", mode="native", max_lanes=2,
+                      page_size=4, max_ctx=32)
+    eng.submit(np.arange(1, 9), 8)
+    eng.step()
+    dev = eng._table_dev
+    assert dev is not None
+    eng.step()                    # no table change: same device buffer
+    assert eng._table_dev is dev
+    for _ in range(20):
+        if not any(eng.lane_req):
+            break
+        eng.step()
+    assert eng.pool.in_use == 0   # released => mirror invalidated
+    assert eng._table_dev is None or eng._table_dev is not dev
 
 
 def test_sampler_temperature_topk():
