@@ -1,4 +1,5 @@
-"""Training benchmark: fused-epilogue kernels vs the unfused native path.
+"""Training benchmark: fused-epilogue kernels vs the unfused native path,
+plus the DP-scaling column for the sharded shard_map step.
 
 Times one full fwd+bwd+update step of native-mode WAGEUBN training with the
 fused dgrad/wgrad/UBN route on and off (QConfig.fuse_kernels — the two are
@@ -9,6 +10,13 @@ CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
   train/<config>_fused    — us per training step; tokens/s
   train/<config>_unfused  — same, fuse_kernels=False
   train/<config>_speedup  — fused-vs-unfused step-time ratio
+  train/dp<N>_intwire     — sharded step @ DP=N, integer-wire grad sync
+  train/dp<N>_f32wire     — same layout, XLA f32 all-reduce sync
+  train/dp_scaling        — dp4-vs-dp1 step-time ratio (int wire)
+
+The DP rows run in a subprocess (virtual host devices must be configured
+before jax initializes) over a fixed n_shards=4, so every layout computes
+bit-identical math — the column isolates parallel speedup + wire cost.
 
 Scale knobs: REPRO_BENCH_FAST drops the largest config and shortens the
 timed window.  On this CPU container both paths dispatch to the XLA
@@ -18,6 +26,8 @@ same toggle compares the compiled Pallas kernels.
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 import time
 
 from .common import emit
@@ -84,7 +94,85 @@ def main():
                  f"tok_s={tokens / dt:.1f};steps={n_steps}")
         emit(f"train/{name}_speedup", 0.0,
              f"fused_vs_unfused={step_us['unfused'] / step_us['fused']:.2f}x")
+    _dp_scaling(fast)
+
+
+# --------------------------------------------------------------------------
+# DP scaling (sharded shard_map step, integer wire vs f32 wire)
+# --------------------------------------------------------------------------
+
+
+def _dp_scaling(fast: bool):
+    """Spawn the DP worker (device count must precede jax init) and re-emit
+    its rows into this process's record stream."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu")
+    env.setdefault("PYTHONPATH", "src")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-m", "benchmarks.train_bench",
+                       "--dp-worker"], capture_output=True, text=True,
+                       timeout=1800, env=env, cwd=root)
+    if r.returncode != 0:
+        raise RuntimeError(f"dp worker failed:\n{r.stdout[-2000:]}"
+                           f"\n{r.stderr[-2000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            emit(name, float(us), derived)
+
+
+def _dp_worker():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import preset
+    from repro.data import TokenTask
+    from repro.launch import shard as S
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.train import make_sharded_train_step
+    from repro.models import build_model
+    from repro.optim import init_momentum
+
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    n_steps = 2 if fast else 6
+    name, arch, batch_sz, seq = _configs(fast)[0]
+    task = TokenTask(vocab=arch.vocab, seq_len=seq, global_batch=batch_sz)
+    tokens = batch_sz * seq
+    base_us = {}
+    for dp in (1, 2, 4):
+        for sync, tag in (("int_ring", "intwire"), ("psum", "f32wire")):
+            mesh = make_cpu_mesh(dp, 1)
+            qcfg = preset("full8", "native")
+            model = build_model(arch, qcfg)
+            params = model.init(jax.random.PRNGKey(0))
+            opt = init_momentum(params)
+            raw, specs = make_sharded_train_step(
+                model, qcfg, model.labels(params), mesh, params,
+                n_shards=4, grad_sync=sync)
+            step_fn = jax.jit(raw)
+            params = S.shard_arrays(mesh, params, specs["params"])
+            opt = S.shard_arrays(mesh, opt, specs["opt"])
+            batch = S.put_batch(mesh, task.batch(0))
+            params, opt, m = step_fn(params, opt, batch, jnp.int32(0))
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for i in range(n_steps):
+                params, opt, m = step_fn(params, opt, batch,
+                                         jnp.int32(i + 1))
+            jax.block_until_ready(m["loss"])
+            dt = (time.perf_counter() - t0) / n_steps
+            base_us[(dp, tag)] = dt * 1e6
+            print(f"ROW,train/dp{dp}_{tag},{dt * 1e6:.1f},"
+                  f"tok_s={tokens / dt:.1f};steps={n_steps};arch={name}")
+    ratio = base_us[(1, 'intwire')] / base_us[(4, 'intwire')]
+    wire = base_us[(4, 'f32wire')] / base_us[(4, 'intwire')]
+    print(f"ROW,train/dp_scaling,0.0,"
+          f"dp4_vs_dp1={ratio:.2f}x;f32_vs_int_at_dp4={wire:.2f}x")
 
 
 if __name__ == "__main__":
-    main()
+    if "--dp-worker" in sys.argv:
+        _dp_worker()
+    else:
+        main()

@@ -347,6 +347,28 @@ def dispatch_banner(cfg=None) -> str:
     return line
 
 
+COLLECTIVE_PRIMS = frozenset({
+    "ppermute", "psum", "pmax", "pmin", "all_gather", "all_to_all",
+    "reduce_scatter", "psum_scatter", "all_reduce"})
+
+
+def collective_eqns(jaxpr) -> list:
+    """(primitive name, out shape, out dtype) for every cross-device
+    collective reachable from `jaxpr` (recursing through shard_map, scan,
+    custom_vjp, ...).
+
+    The sharded-training acceptance checks are phrased over this listing
+    (DESIGN.md §9): with the integer-wire gradient sync, every `ppermute`
+    or `all_gather` payload must be an integer dtype and every
+    floating-point reduction (`psum`/`pmax`) must be scalar-shaped — the
+    wire scale pmax and the loss-metric mean.  A tensor-shaped f32 psum
+    means gradients crossed devices as floats (the XLA all-reduce baseline
+    the jaxpr tests use as their positive control).
+    """
+    return [e for e in eqns_outside_pallas(jaxpr)
+            if e[0] in COLLECTIVE_PRIMS]
+
+
 def eqns_outside_pallas(jaxpr, out=None) -> list:
     """(primitive name, out shape, out dtype) for every eqn reachable from
     `jaxpr`, recursing through sub-jaxprs (pjit, scan, custom_vjp, ...) but

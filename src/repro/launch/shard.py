@@ -1,0 +1,128 @@
+"""DP×TP partition rules for the shard_map training step (DESIGN.md §9).
+
+The sharded train step (launch/train.make_sharded_train_step) runs as ONE
+full-manual shard_map over a ("data", "model") mesh:
+
+  data  — batch parallelism.  The global batch splits into `n_shards`
+          VIRTUAL shards (the quantization granularity — a static property
+          of the algorithm); each device runs n_shards/dp of them and
+          gradient sync rides the integer wire (runtime/compress.py).
+  model — manual tensor parallelism.  Transformer families shard attention
+          heads / FFN features / experts; params arrive pre-sliced via the
+          specs below and the Megatron tp_enter/tp_exit pair in
+          models/layers.py carries the boundary psums.  Families without a
+          manual-TP implementation are DP-only (build_model raises).
+
+This module owns the per-family sharding RULES: which parameter axes live
+on the model axis, how optimizer state mirrors them (including the ZeRO-1
+flat-chunk layout for the Momentum accumulator), and how batches split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+# Transformer-family leaves sharded over the model axis, by parameter name:
+# value = the axis (WITHIN the stacked-layers leaf) that carries the shard.
+# Column-sharded (output features / heads / experts): wq wk wv w_gate w_up
+# wg wu; row-sharded (input features, partial outputs psum'ed by tp_exit):
+# wo w_down wd.
+_TP_SHARDED_AXIS = {
+    "wq": 2, "wk": 2, "wv": 2, "w_gate": 2, "w_up": 2,   # (L, d, f_tp)
+    "wo": 1, "w_down": 1,                                # (L, f_tp, d)
+    "wg": 1, "wu": 1, "wd": 1,                           # (L, e_tp, ...)
+}
+
+
+def mesh_dims(mesh):
+    """(dp, tp) sizes of a ("data", "model") training mesh."""
+    names = set(mesh.axis_names)
+    if names != {DATA_AXIS, MODEL_AXIS}:
+        raise ValueError(
+            f"sharded training wants a (data, model) mesh, got {names}")
+    return mesh.shape[DATA_AXIS], mesh.shape[MODEL_AXIS]
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def tp_param_specs(model, params):
+    """PartitionSpec tree for `params`: model-axis shards per the family
+    rules above, everything else replicated.  With tp_size == 1 every leaf
+    is replicated (pure DP)."""
+    if getattr(model, "tp_size", 1) == 1:
+        return jax.tree.map(lambda _: P(), params)
+
+    def spec(path, leaf):
+        ax = _TP_SHARDED_AXIS.get(_leaf_name(path))
+        if ax is None:
+            return P()
+        return P(*((MODEL_AXIS if i == ax else None)
+                   for i in range(leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(batch):
+    """Batches split over the data axis on their leading dimension."""
+    return jax.tree.map(lambda _: P(DATA_AXIS), batch)
+
+
+def opt_specs(param_specs):
+    """MomentumState specs for the replicated-optimizer layout: the
+    accumulator mirrors the params, the step counter is replicated."""
+    from repro.optim import MomentumState
+    return MomentumState(acc=param_specs, step=P())
+
+
+def shard_arrays(mesh, tree, specs):
+    """device_put every leaf with its NamedSharding (host -> mesh)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+def put_batch(mesh, batch):
+    """Place a host batch on the mesh, split over the data axis."""
+    sharding = NamedSharding(mesh, P(DATA_AXIS))
+    return jax.tree.map(
+        lambda x: jax.device_put(jnp.asarray(x), sharding), batch)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 layout: Momentum accumulator as flat per-device chunks
+# --------------------------------------------------------------------------
+#
+# Each leaf's accumulator is stored FLAT, padded to dp equal chunks, global
+# shape (dp * chunk,), sharded P("data") — so each device holds exactly the
+# chunk it updates.  The update itself is elementwise (optim/momentum.py
+# apply_leaf_update), so chunking cannot change a bit of the result; the
+# gradient quantization (CQ amax + stochastic bits) always runs on the FULL
+# leaf before chunking for the same reason.
+
+
+def zero_chunk_len(size: int, dp: int) -> int:
+    return -(-size // dp)
+
+
+def zero_init_momentum(params, dp: int):
+    """MomentumState with flat padded (dp * chunk,) accumulator leaves."""
+    from repro.optim import MomentumState
+    acc = jax.tree.map(
+        lambda p: jnp.zeros((dp * zero_chunk_len(p.size, dp),), p.dtype),
+        params)
+    return MomentumState(acc=acc, step=jnp.zeros((), jnp.int32))
+
+
+def zero_opt_specs(params):
+    """Specs for the ZeRO-1 MomentumState: accumulator chunks over data."""
+    from repro.optim import MomentumState
+    return MomentumState(acc=jax.tree.map(lambda _: P(DATA_AXIS), params),
+                         step=P())

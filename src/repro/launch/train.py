@@ -4,6 +4,15 @@
 backward (inside the model's custom vjps), CQ/Q gradient quantization +
 quantized Momentum + fixed-point update (inside the optimizer).  Stochastic
 rounding keys derive from the step counter => bit-exact restart.
+
+`make_sharded_train_step` is the DP×TP production step (DESIGN.md §9): one
+full-manual shard_map over a ("data", "model") mesh whose gradient sync
+rides the integer wire (runtime/compress.wire_sync_mean) instead of XLA's
+f32 all-reduce.  The training algorithm is parameterized by `n_shards` (the
+quantization granularity — how many virtual batch shards the step computes
+independently before the exact integer reduction), NOT by the device count:
+running the same (global batch, n_shards) on 1 device or on dp devices
+produces bit-identical weights (tests/test_sharded_train.py).
 """
 from __future__ import annotations
 
@@ -13,12 +22,13 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.configs import get as get_arch
 from repro.core.qconfig import preset
 from repro.models import build_model
-from repro.optim import (dr_bits_schedule, fixed_point_lr, init_momentum,
-                         momentum_update)
+from repro.optim import (apply_leaf_update, dr_bits_schedule, fixed_point_lr,
+                         init_momentum, momentum_update, quantize_grad_leaf)
 
 SEED = 17
 
@@ -66,6 +76,171 @@ def make_train_step(model, qcfg, labels_tree, lr=0.05, mom=0.75,
         return params, opt_state, metrics
 
     return train_step
+
+
+# --------------------------------------------------------------------------
+# sharded DP×TP training step (shard_map + integer-wire gradient sync)
+# --------------------------------------------------------------------------
+
+
+def _pad_flat(x, n: int):
+    flat = x.reshape(-1)
+    return jnp.pad(flat, (0, n - flat.size)) if flat.size < n else flat
+
+
+def _quant_update_leaf(cfg, lab) -> bool:
+    """Leaves whose updated values land on the k_WU grid (Eq. 24) — these
+    all-gather as integer payloads in the ZeRO-1 layout."""
+    return cfg.quantize and lab != "exempt" and cfg.quant_u
+
+
+def _zero1_update(cfg, params, grads, state, labels, key, lr, mom, dr_bits,
+                  dp: int):
+    """ZeRO-1 Momentum step inside the shard_map body.
+
+    The accumulator lives as flat per-device chunks (launch/shard.py); the
+    gradient is quantized on the FULL leaf (CQ amax + stochastic bits are
+    leaf-global), then each device applies the elementwise update to its
+    chunk only and the updated chunks all-gather back — as int32 payloads on
+    the fixed 2^(1-k_WU) grid for quantized leaves (exact: the update
+    already lands on that grid), fp32 for exempt leaves.  Bit-identical to
+    the replicated `momentum_update` by the elementwise-chunking argument in
+    optim/momentum.py.
+    """
+    from repro.optim import MomentumState
+
+    r = lax.axis_index("data")
+    leaves, treedef = jax.tree.flatten(params)
+    glist = treedef.flatten_up_to(grads)
+    alist = treedef.flatten_up_to(state.acc)
+    llist = treedef.flatten_up_to(labels)
+    new_p, new_a = [], []
+    for i, (p, g, a, lab) in enumerate(zip(leaves, glist, alist, llist)):
+        gq = quantize_grad_leaf(cfg, g, lab, jax.random.fold_in(key, i),
+                                dr_bits)
+        c = a.shape[0]                       # local chunk length
+        p_c = lax.dynamic_slice(_pad_flat(p, dp * c), (r * c,), (c,))
+        g_c = lax.dynamic_slice(_pad_flat(gq, dp * c), (r * c,), (c,))
+        q_c, a_c = apply_leaf_update(cfg, p_c, g_c, a, lab, lr, mom)
+        if _quant_update_leaf(cfg, lab):     # k_WU grid -> integer gather
+            step = 2.0 ** (1 - cfg.k_wu)
+            data = jnp.round(q_c / step).astype(jnp.int32)
+            full = lax.all_gather(data, "data", axis=0).reshape(-1)
+            full = full.astype(jnp.float32) * step
+        else:
+            full = lax.all_gather(q_c, "data", axis=0).reshape(-1)
+        new_p.append(full[: p.size].reshape(p.shape))
+        new_a.append(a_c)
+    return (jax.tree.unflatten(treedef, new_p),
+            MomentumState(acc=jax.tree.unflatten(treedef, new_a),
+                          step=state.step + 1))
+
+
+def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
+                            lr=0.05, mom=0.75, dr_bits: int = 8,
+                            n_shards: int | None = None, wire_bits: int = 16,
+                            grad_sync: str = "int_ring",
+                            opt_shard: str = "replicated"):
+    """DP×TP shard_map training step over a ("data", "model") mesh.
+
+    Args:
+      model: built with tp_size == mesh model-axis size (build_model).
+      params: a concrete (global) param tree — used only to derive the
+        partition specs; pass the tree you will train.
+      n_shards: virtual batch shards (quantization granularity).  Default
+        dp.  Must be a multiple of dp; the global batch must divide by it.
+      wire_bits: integer wire width for gradient sync (8/16/32).
+      grad_sync: "int_ring" (integer wire, DP-invariant) or "psum" (XLA
+        fp32 all-reduce baseline — the thing the jaxpr tests prove the
+        int_ring path does NOT contain).
+      opt_shard: "replicated" | "zero1" (Momentum accumulator sharded over
+        data as flat chunks; requires tp == 1; see launch/shard.py).
+
+    Returns (step_fn, state_specs): call `jax.jit(step_fn)` on arrays
+    placed per state_specs — a dict with "params"/"opt"/"batch" spec trees
+    (launch/shard.shard_arrays places them).
+
+    Invariance contract (DESIGN.md §9): each virtual shard's forward and
+    backward runs shard-locally (per-shard amax granularity; the fused
+    Pallas kernels stay legal because no collective ever appears inside a
+    kernel body); the ONE cross-device scale reduction is wire_sync_mean's
+    lax.pmax, and every gradient reduction that crosses devices is an exact
+    integer sum — so weights after the step are a pure function of
+    (global batch, n_shards), not of the device layout.
+    """
+    from repro.compat import SHARD_MAP_KW as _SM_KW
+    from repro.compat import shard_map as _shard_map
+    from repro.launch import shard as S
+    from repro.runtime.compress import wire_sync_mean
+
+    dp, tp = S.mesh_dims(mesh)
+    if getattr(model, "tp_size", 1) != tp:
+        raise ValueError(f"model.tp_size={getattr(model, 'tp_size', 1)} "
+                         f"!= mesh model axis {tp}")
+    if opt_shard == "zero1" and tp != 1:
+        raise ValueError("opt_shard='zero1' requires tp == 1")
+    n_shards = dp if n_shards is None else n_shards
+    if n_shards % dp:
+        raise ValueError(f"n_shards={n_shards} must be a multiple of dp={dp}")
+    vs_local = n_shards // dp
+    lrq = fixed_point_lr(lr, qcfg)
+
+    def sync_leaf(g):
+        if grad_sync == "int_ring":
+            return wire_sync_mean(g, "data", n_shards=n_shards, n_dev=dp,
+                                  bits=wire_bits)
+        return lax.pmean(jnp.mean(g, axis=0), "data")   # f32-wire baseline
+
+    def body(params, opt_state, batch, step_idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(SEED), step_idx)
+
+        def per_vshard(b_i):
+            (l, _), g = jax.value_and_grad(
+                model.loss, has_aux=True)(params, b_i, key)
+            return l, g
+
+        b_local = jax.tree.leaves(batch)[0].shape[0]
+        if b_local % vs_local:
+            raise ValueError(
+                f"global batch {b_local * dp} must divide by "
+                f"n_shards={n_shards} (dp={dp}, {vs_local} virtual shards "
+                f"per device, local batch {b_local})")
+        # (b_local, ...) -> (vs_local, b_vshard, ...): row-major, so virtual
+        # shard v always covers the same global batch rows on any layout
+        vb = jax.tree.map(
+            lambda x: x.reshape((vs_local, x.shape[0] // vs_local)
+                                + x.shape[1:]), batch)
+        # lax.map (not vmap): each virtual shard traces the same unbatched
+        # program a single-device run would, keeping per-shard f32 reduction
+        # shapes layout-independent — the bit-exactness contract needs that
+        losses, grads = lax.map(per_vshard, vb)
+        grads = jax.tree.map(sync_leaf, grads)
+        loss = lax.pmean(jnp.mean(losses), "data")
+        okey = jax.random.fold_in(key, 1)
+        if opt_shard == "zero1":
+            params2, opt2 = _zero1_update(
+                qcfg, params, grads, opt_state, labels_tree, okey, lrq, mom,
+                dr_bits, dp)
+        else:
+            params2, opt2 = momentum_update(
+                qcfg, params, grads, opt_state, labels_tree, okey, lrq,
+                mom=mom, dr_bits=dr_bits)
+        return params2, opt2, {"loss": loss}
+
+    pspecs = S.tp_param_specs(model, params)
+    ospecs = (S.zero_opt_specs(params) if opt_shard == "zero1"
+              else S.opt_specs(pspecs))
+    # zero1 implies tp == 1, where pspecs is already the all-replicated
+    # tree — params come back replicated either way
+    step_fn = _shard_map(
+        body, mesh=mesh,
+        in_specs=(pspecs, ospecs, jax.sharding.PartitionSpec("data"),
+                  jax.sharding.PartitionSpec()),
+        out_specs=(pspecs, ospecs, jax.sharding.PartitionSpec()),
+        **_SM_KW)
+    specs = {"params": pspecs, "opt": ospecs,
+             "batch": jax.sharding.PartitionSpec("data")}
+    return step_fn, specs
 
 
 def make_serve_step(model):
@@ -146,6 +321,21 @@ def main(argv=None):
                    help="use the reduced smoke config (CPU scale)")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--save-every", type=int, default=25)
+    p.add_argument("--dp", type=int, default=1,
+                   help="data-parallel mesh size (dp*tp > 1 engages the "
+                        "shard_map step with integer-wire gradient sync)")
+    p.add_argument("--tp", type=int, default=1,
+                   help="tensor-parallel mesh size (transformer families)")
+    p.add_argument("--n-shards", type=int, default=0,
+                   help="virtual batch shards (quantization granularity); "
+                        "0 = dp")
+    p.add_argument("--wire-bits", type=int, default=16,
+                   choices=[8, 16, 32],
+                   help="integer wire width for sharded gradient sync")
+    p.add_argument("--grad-sync", default="int_ring",
+                   choices=["int_ring", "psum"])
+    p.add_argument("--opt-shard", default="replicated",
+                   choices=["replicated", "zero1"])
     args = p.parse_args(argv)
 
     acfg = get_arch(args.arch)
@@ -154,7 +344,8 @@ def main(argv=None):
     qcfg = preset(args.preset, args.mode if args.preset != "fp32" else None)
     from repro.kernels.ops import dispatch_banner
     print(dispatch_banner(qcfg))
-    model = build_model(acfg, qcfg)
+    sharded = args.dp * args.tp > 1
+    model = build_model(acfg, qcfg, tp_size=args.tp if sharded else 1)
 
     from repro.data import TokenTask
     task = TokenTask(vocab=acfg.vocab, seq_len=args.seq,
@@ -162,10 +353,29 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    opt = init_momentum(params)
     labels_tree = model.labels(params)
-    step_fn = jax.jit(make_train_step(model, qcfg, labels_tree, lr=args.lr),
-                      donate_argnums=(0, 1))
+    if sharded:
+        from repro.launch import shard as S
+        from repro.launch.mesh import make_cpu_mesh
+        mesh = make_cpu_mesh(args.dp, args.tp)
+        opt = (S.zero_init_momentum(params, args.dp)
+               if args.opt_shard == "zero1" else init_momentum(params))
+        raw_step, specs = make_sharded_train_step(
+            model, qcfg, labels_tree, mesh, params, lr=args.lr,
+            n_shards=args.n_shards or None, wire_bits=args.wire_bits,
+            grad_sync=args.grad_sync, opt_shard=args.opt_shard)
+        step_fn = jax.jit(raw_step, donate_argnums=(0, 1))
+        params = S.shard_arrays(mesh, params, specs["params"])
+        opt = S.shard_arrays(mesh, opt, specs["opt"])
+        print(f"[shard] mesh dp={args.dp} tp={args.tp} "
+              f"n_shards={args.n_shards or args.dp} "
+              f"wire={args.grad_sync}:{args.wire_bits}b "
+              f"opt={args.opt_shard}")
+    else:
+        opt = init_momentum(params)
+        step_fn = jax.jit(make_train_step(model, qcfg, labels_tree,
+                                          lr=args.lr),
+                          donate_argnums=(0, 1))
 
     ckpt = None
     start = 0
@@ -178,7 +388,11 @@ def main(argv=None):
 
     t0 = time.time()
     for step in range(start, args.steps):
-        batch = jax.tree.map(jnp.asarray, task.batch(step))
+        if sharded:
+            from repro.launch.shard import put_batch
+            batch = put_batch(mesh, task.batch(step))
+        else:
+            batch = jax.tree.map(jnp.asarray, task.batch(step))
         params, opt, metrics = step_fn(params, opt, batch,
                                        jnp.int32(step))
         if step % 10 == 0 or step == args.steps - 1:

@@ -78,9 +78,15 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
 
 class Zamba2:
     def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
-                 dp_axes=("data",), tp_axis="model"):
+                 dp_axes=("data",), tp_axis="model", tp_size: int = 1):
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+        self.tp_size = tp_size
+        if tp_size != 1:
+            raise ValueError(
+                f"{type(self).__name__} supports DP-only sharding "
+                f"(manual TP shards attention heads / FFN / experts; "
+                f"got tp_size={tp_size})")
         ae = acfg.attn_every
         self.n_groups = acfg.n_layers // ae
         self.tail = acfg.n_layers - self.n_groups * ae

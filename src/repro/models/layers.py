@@ -50,6 +50,69 @@ def maybe_remat(acfg, fn):
     return fn
 
 
+# --------------------------------------------------------------------------
+# manual tensor parallelism (Megatron f/g pair for shard_map bodies)
+# --------------------------------------------------------------------------
+#
+# Inside the full-manual shard_map training step (launch/train.py) the model
+# axis carries head/FFN/expert shards.  A column-sharded matmul needs no
+# forward communication but its input cotangent is PARTIAL over the axis
+# (each rank only back-propagates through its local output features);
+# a row-sharded matmul produces partial outputs.  tp_enter / tp_exit are the
+# classic conjugate pair: enter = identity fwd / psum bwd (placed where
+# replicated activations feed sharded params), exit = psum fwd / identity
+# bwd (placed where partial outputs rejoin the replicated stream).  The
+# psums carry fp32 ACTIVATIONS/ERRORS (the TP boundary traffic DESIGN.md §9
+# scopes out of the integer-wire gradient contract); parameter gradients
+# never cross the model axis — sharded params get local grads, replicated
+# params compute identical grads on every rank.
+
+
+def _psum_float_leaves(axis, ct):
+    return jax.tree.map(
+        lambda t: t if t.dtype == jax.dtypes.float0 else lax.psum(t, axis),
+        ct)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tp_enter(axis: str, x):
+    """Identity forward; psum over `axis` on the backward cotangent.
+
+    `x` may be an Array or a QTensor (the payload passes through untouched,
+    so decompose-once is preserved; only the carrier cotangent is reduced).
+    """
+    return x
+
+
+def _tp_enter_fwd(axis, x):
+    return x, None
+
+
+def _tp_enter_bwd(axis, _, ct):
+    return (_psum_float_leaves(axis, ct),)
+
+
+tp_enter.defvjp(_tp_enter_fwd, _tp_enter_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tp_exit(axis: str, y: Array) -> Array:
+    """psum over `axis` forward (partial row-sharded outputs -> replicated);
+    identity backward (the downstream cotangent is already replicated)."""
+    return lax.psum(y, axis)
+
+
+def _tp_exit_fwd(axis, y):
+    return lax.psum(y, axis), None
+
+
+def _tp_exit_bwd(axis, _, ct):
+    return (ct,)
+
+
+tp_exit.defvjp(_tp_exit_fwd, _tp_exit_bwd)
+
+
 def lscan(acfg, body, init, xs):
     """scan-over-layers honoring acfg.unroll_layers (cost-exact compiles)."""
     return lax.scan(body, init, xs, unroll=(True if acfg.unroll_layers

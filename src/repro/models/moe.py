@@ -106,18 +106,37 @@ def _moe_local(cfg: QConfig, acfg, x, rw, wg, wu, wd, e_off,
 
 
 def moe_ffn(cfg: QConfig, acfg, x, p, mesh=None, dp_axes=("data",),
-            tp_axis="model"):
+            tp_axis="model", tp_size: int = 1):
     """x: (B, S, D) on the activation grid -> (B, S, D).
 
     QTensor inputs degrade to their grid carrier here: the capacity
     dispatch (gather + gate mask) and shard_map specs operate on flat fp32;
     the expert matmuls re-enter the integer path via qeinsum/qweight.
+
+    Three parallelism regimes:
+      mesh given        — this function owns a shard_map (pjit callers).
+      tp_size > 1       — manual expert parallelism INSIDE an enclosing
+                          full-manual shard_map (the sharded train step):
+                          expert params arrive pre-sliced over `tp_axis`,
+                          routing is computed identically on every rank,
+                          and the caller's tp_exit psums the partial
+                          outputs.  The router is replicated, so its
+                          cotangent (partial per rank: only local experts'
+                          gate paths) re-enters through tp_enter.
+      neither           — single-device local MoE.
     """
     x = qt_carrier(x)
     b, s, d = x.shape
     x2 = x.reshape(b * s, d)
 
     dropless = s == 1                   # decode: see _moe_local docstring
+    if tp_size > 1:
+        from .layers import tp_enter
+        el = p["wg"].shape[0]           # local expert count (pre-sliced)
+        e_off = lax.axis_index(tp_axis) * el
+        y = _moe_local(cfg, acfg, x2, tp_enter(tp_axis, p["router"]),
+                       p["wg"], p["wu"], p["wd"], e_off, dropless=dropless)
+        return y.reshape(b, s, d)       # partial; caller's tp_exit psums
     if mesh is None or tp_axis not in mesh.axis_names:
         y = _moe_local(cfg, acfg, x2, p["router"], p["wg"], p["wu"], p["wd"],
                        e_off=0, dropless=dropless)

@@ -22,6 +22,11 @@ FAMILIES = {
 
 
 def build_model(acfg: ArchConfig, qcfg: QConfig, mesh=None,
-                dp_axes=("data",), tp_axis="model"):
+                dp_axes=("data",), tp_axis="model", tp_size: int = 1):
+    """tp_size > 1 builds the model for MANUAL tensor parallelism inside a
+    full-manual shard_map (launch/train.make_sharded_train_step): params
+    arrive pre-sliced over `tp_axis` per launch/shard.py's specs.  Families
+    without a manual-TP implementation raise."""
     cls = FAMILIES[acfg.family]
-    return cls(acfg, qcfg, mesh=mesh, dp_axes=dp_axes, tp_axis=tp_axis)
+    return cls(acfg, qcfg, mesh=mesh, dp_axes=dp_axes, tp_axis=tp_axis,
+               tp_size=tp_size)

@@ -29,9 +29,15 @@ def _bn_init(c):
 
 class ResNet:
     def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
-                 dp_axes=("data",), tp_axis="model"):
+                 dp_axes=("data",), tp_axis="model", tp_size: int = 1):
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+        self.tp_size = tp_size
+        if tp_size != 1:
+            raise ValueError(
+                f"{type(self).__name__} supports DP-only sharding "
+                f"(manual TP shards attention heads / FFN / experts; "
+                f"got tp_size={tp_size})")
         self.bottleneck = acfg.block == "bottleneck"
         self.widths = (64, 128, 256, 512)[: len(acfg.stage_sizes)]
 

@@ -14,9 +14,15 @@ from . import ssm as S
 
 class SSMLM:
     def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
-                 dp_axes=("data",), tp_axis="model"):
+                 dp_axes=("data",), tp_axis="model", tp_size: int = 1):
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+        self.tp_size = tp_size
+        if tp_size != 1:
+            raise ValueError(
+                f"{type(self).__name__} supports DP-only sharding "
+                f"(manual TP shards attention heads / FFN / experts; "
+                f"got tp_size={tp_size})")
 
     def init(self, key):
         a = self.a

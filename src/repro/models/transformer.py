@@ -26,9 +26,45 @@ Array = jax.Array
 
 class LMTransformer:
     def __init__(self, acfg: ArchConfig, qcfg: QConfig, mesh=None,
-                 dp_axes=("data",), tp_axis="model"):
+                 dp_axes=("data",), tp_axis="model", tp_size: int = 1):
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
+        # Manual tensor parallelism (shard_map bodies, DESIGN.md §9): with
+        # tp_size > 1 this instance computes on its LOCAL head/FFN/expert
+        # shard — params must arrive pre-sliced (launch/shard.py specs) and
+        # the Megatron enter/exit psums activate.  tp_size=1 is the plain
+        # replicated model (identical to the legacy constructor).
+        self.tp_size = tp_size
+        if tp_size > 1:
+            divisible = (acfg.n_heads % tp_size == 0
+                         and acfg.n_kv % tp_size == 0
+                         and acfg.d_ff % tp_size == 0
+                         and (not acfg.moe_experts
+                              or acfg.moe_experts % tp_size == 0))
+            if not divisible:
+                raise ValueError(
+                    f"tp_size={tp_size} must divide n_heads={acfg.n_heads}, "
+                    f"n_kv={acfg.n_kv}, d_ff={acfg.d_ff}"
+                    + (f", moe_experts={acfg.moe_experts}"
+                       if acfg.moe_experts else ""))
+
+    @property
+    def _hl(self):
+        """Local (per-TP-rank) query-head count."""
+        return self.a.n_heads // self.tp_size
+
+    @property
+    def _kvl(self):
+        """Local (per-TP-rank) KV-head count."""
+        return self.a.n_kv // self.tp_size
+
+    def _tp_in(self, x):
+        """Megatron `f`: identity fwd / psum bwd at column-shard entries."""
+        return L.tp_enter(self.tp, x) if self.tp_size > 1 else x
+
+    def _tp_out(self, y):
+        """Megatron `g`: psum fwd / identity bwd after row-shard outputs."""
+        return L.tp_exit(self.tp, y) if self.tp_size > 1 else y
 
     # ---------------- params ----------------
 
@@ -97,11 +133,13 @@ class LMTransformer:
 
     def _attn(self, p, x, pos, mode, cache=None):
         a, q = self.a, self.q
+        hl, kvl = self._hl, self._kvl
         b, s, d = x.shape
         h = qact(q, "none", L.norm(q, a.norm, x, p["ln1"]))
-        qh = qdense(q, h, p["wq"]).reshape(b, s, a.n_heads, a.dh)
-        kh = qdense(q, h, p["wk"]).reshape(b, s, a.n_kv, a.dh)
-        vh = qdense(q, h, p["wv"]).reshape(b, s, a.n_kv, a.dh)
+        h = self._tp_in(h)          # wq/wk/wv are head(column)-sharded
+        qh = qdense(q, h, p["wq"]).reshape(b, s, hl, a.dh)
+        kh = qdense(q, h, p["wk"]).reshape(b, s, kvl, a.dh)
+        vh = qdense(q, h, p["wv"]).reshape(b, s, kvl, a.dh)
         if mode == "train":
             pos1 = pos  # (S,)
             qh = L.rope(qh, pos1, a.rope_theta)
@@ -145,17 +183,19 @@ class LMTransformer:
                                        L.kv_qtensor(v8, vs), q_pos=pvec,
                                        t_valid=pvec.max() + 1)
                 new_cache = (k8, v8)
-        o = o.reshape(b, s, a.n_heads * a.dh)
-        return x + qdense(q, o, p["wo"]), new_cache
+        o = o.reshape(b, s, hl * a.dh)
+        return x + self._tp_out(qdense(q, o, p["wo"])), new_cache
 
     def _ffn(self, p, x):
         a, q = self.a, self.q
         h = qact(q, "none", L.norm(q, a.norm, x, p["ln2"]))
+        h = self._tp_in(h)          # gate/up (or experts) are column-sharded
         if a.moe_experts:
-            y = MOE.moe_ffn(q, a, h, p["moe"], self.mesh, self.dp, self.tp)
+            y = MOE.moe_ffn(q, a, h, p["moe"], self.mesh, self.dp, self.tp,
+                            tp_size=self.tp_size)
         else:
             y = L.swiglu(q, h, p["w_gate"], p["w_up"], p["w_down"], a.act)
-        return x + y
+        return x + self._tp_out(y)
 
     def _block(self, p, x, pos, mode, cache=None):
         from jax.sharding import PartitionSpec as PS

@@ -85,6 +85,57 @@ def _mom_coeff(cfg: QConfig, mom: float) -> float:
     return round(mom * s) / s          # e.g. 0.75 = 3 * 2^-2 (3-bit)
 
 
+def _plain_path(cfg: QConfig, lab) -> bool:
+    """Vanilla-momentum leaves: fp32 config, exempt leaves, or Table II runs
+    with both the G and U quantizers off."""
+    return (not cfg.quantize or lab == "exempt"
+            or not (cfg.quant_g or cfg.quant_u))
+
+
+def quantize_grad_leaf(cfg: QConfig, g, lab, key, dr_bits: int = 8):
+    """Per-leaf gradient quantization (Eq. 18): CQ for "w" leaves, direct
+    15-bit for gamma/beta, identity for plain-path leaves.
+
+    Split from `apply_leaf_update` so ZeRO-sharded optimizers can quantize
+    the FULL leaf (CQ's amax scale and stochastic-rounding bits are
+    leaf-global — a chunk-local quantization would make the update depend
+    on the chunking) and then update only their chunk of (p, gq, acc).
+    """
+    if _plain_path(cfg, lab) or not cfg.quant_g:
+        return g
+    if lab == "w":
+        # registry-resolved gradient quantizer (cfg.g names kind, k_gc and
+        # static params); the dr schedule and rounding mode are per-step
+        # parameters injected only when the registered quantizer declares
+        # those fields (i.e. CQ-family kinds)
+        return _grad_quantizer(cfg, dr_bits)(g, key=key)
+    if lab in ("gamma", "beta"):
+        k = cfg.k_ggamma if lab == "gamma" else cfg.k_gbeta
+        return get_quantizer("direct", k)(g)
+    raise ValueError(f"unknown label {lab!r}")
+
+
+def apply_leaf_update(cfg: QConfig, p, gq, a, lab, lr, mom: float = 0.75):
+    """Elementwise Momentum + fixed-point update (Eq. 19-24) given the
+    already-quantized gradient `gq`.  Returns (new_p, new_acc).
+
+    Every operation is elementwise, so this applies bit-identically to any
+    aligned chunking of (p, gq, a) — the property the ZeRO-1 sharded update
+    in launch/train.py relies on (tests/test_sharded_train.py).
+    """
+    if _plain_path(cfg, lab) or not cfg.quant_u:
+        # plain momentum (raw mom coefficient; Table II FP32-update runs)
+        acc = mom * a + gq
+        return p - lr * acc, acc
+    momq = _mom_coeff(cfg, mom)
+    acc_full = momq * qf.q_direct(a, cfg.k_acc) + gq      # Eq. 20
+    acc = qf.q_direct(acc_full, cfg.k_acc)
+    dw = lr * acc_full                                    # Eq. 23
+    q = qf.q_direct(p - dw, cfg.k_wu)                     # k_WU grid
+    lim = 1.0 - 2.0 ** (1 - cfg.k_wu)
+    return jnp.clip(q, -lim, lim), acc
+
+
 def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
                     labels: Any, key: jax.Array, lr: float | jax.Array,
                     mom: float = 0.75, dr_bits: int = 8):
@@ -93,7 +144,6 @@ def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
     `lr` must already be on the k_lr grid (see fixed_point_lr); `dr_bits` is
     the (static) CQ range schedule value for this step.
     """
-    momq = _mom_coeff(cfg, mom)
     leaves, treedef = jax.tree.flatten(params)
     glist = treedef.flatten_up_to(grads)
     alist = treedef.flatten_up_to(state.acc)
@@ -101,35 +151,9 @@ def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
 
     new_p, new_a = [], []
     for i, (p, g, a, lab) in enumerate(zip(leaves, glist, alist, llist)):
-        if (not cfg.quantize or lab == "exempt"
-                or not (cfg.quant_g or cfg.quant_u)):
-            acc = mom * a + g
-            q = p - lr * acc
-        else:
-            if not cfg.quant_g:
-                gq = g
-            elif lab == "w":
-                # registry-resolved gradient quantizer (cfg.g names kind,
-                # k_gc and static params); the dr schedule and rounding mode
-                # are per-step parameters injected only when the registered
-                # quantizer declares those fields (i.e. CQ-family kinds)
-                gq = _grad_quantizer(cfg, dr_bits)(
-                    g, key=jax.random.fold_in(key, i))
-            elif lab in ("gamma", "beta"):
-                k = cfg.k_ggamma if lab == "gamma" else cfg.k_gbeta
-                gq = get_quantizer("direct", k)(g)
-            else:
-                raise ValueError(f"unknown label {lab!r}")
-            if not cfg.quant_u:       # Table II runs: FP32 update path
-                acc = mom * a + gq
-                q = p - lr * acc
-            else:
-                acc_full = momq * qf.q_direct(a, cfg.k_acc) + gq  # Eq. 20
-                acc = qf.q_direct(acc_full, cfg.k_acc)
-                dw = lr * acc_full                                # Eq. 23
-                q = qf.q_direct(p - dw, cfg.k_wu)                 # k_WU grid
-                lim = 1.0 - 2.0 ** (1 - cfg.k_wu)
-                q = jnp.clip(q, -lim, lim)
+        gq = quantize_grad_leaf(cfg, g, lab, jax.random.fold_in(key, i),
+                                dr_bits)
+        q, acc = apply_leaf_update(cfg, p, gq, a, lab, lr, mom)
         new_p.append(q)
         new_a.append(acc)
 

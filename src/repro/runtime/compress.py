@@ -13,11 +13,27 @@ once into (int payload, shared pow2 scale) and the ring ships the payload;
 `wire_quantize` is exported for tests and for QTensor-native callers that
 want to hand the payload to other transports.
 
-Overflow control: with n shards, partial sums of b-bit operands need
-b + ceil(log2 n) bits; we pre-shift the grid by ceil(log2 n) so every
-partial sum stays within the wire width (the discarded low bits are below
-CQ's own grid once divided by n — documented trade-off, error-feedback hook
-below).
+Overflow control: with n contributions, partial sums of b-bit operands need
+b + ceil(log2 n) bits; `wire_quantize` pre-shifts the grid by `shift` and
+clips payloads to `wire_limit(bits, shift)` = 2^(bits-1-shift) - 1, so ANY
+partial sum of up to 2^shift payloads stays strictly inside the signed wire
+width (tests/test_qtensor.py proves the bound by property for n <= 256).
+The discarded low bits are below CQ's own grid once divided by n —
+documented trade-off.
+
+Two layers of API:
+
+  outer wrappers (`compressed_psum_int`, `ring_reduce_scatter_int`) own
+  their shard_map — drop-in collectives for replicated callers.
+
+  in-body primitives (`ring_allreduce_int`, `wire_sync_mean`) run INSIDE an
+  enclosing shard_map (the sharded training step, launch/train.py): the
+  caller already holds per-device values and an axis name.  `wire_sync_mean`
+  is the DP-invariant gradient sync (DESIGN.md §9): payload rounding happens
+  per VIRTUAL shard against a globally pmax'ed pow2 scale with a shift
+  derived from the STATIC shard count, and every cross-device reduction is
+  an exact integer sum — so the result is bitwise independent of how the
+  virtual shards are laid out over devices.
 """
 from __future__ import annotations
 
@@ -25,6 +41,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -34,17 +51,47 @@ from repro.core import qfuncs as qf
 from repro.core.qtensor import QTensor, payload_dtype
 
 
+def wire_shift(n: int) -> int:
+    """Grid pre-shift covering n-way partial sums: ceil(log2 n)."""
+    return max(0, math.ceil(math.log2(max(n, 1))))
+
+
+def wire_limit(bits: int, shift: int) -> float:
+    """Largest payload magnitude such that any partial sum of up to 2^shift
+    payloads stays strictly inside the signed `bits`-wide wire dtype.
+
+    Raises when the wire is too narrow to carry ANY signal at that fan-in
+    (shift > bits - 2, e.g. 256-way sums on an int8 wire): silently clipping
+    every payload to zero would be a correctness bug dressed as compression.
+    """
+    if shift > bits - 2:
+        raise ValueError(
+            f"{bits}-bit wire cannot carry {2 ** shift}-way partial sums "
+            f"(need shift <= bits - 2 = {bits - 2}, got {shift})")
+    return 2.0 ** (bits - 1 - shift) - 1.0
+
+
 def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
     """Decompose gradient chunks into the integer wire QTensor.
 
     scale = pow2_ceil(amax) * 2^(1 - bits + shift): the pre-shift keeps
-    n-way partial sums inside the wire width.  `amax` must already be the
-    global max across participating shards (pmax'ed by the caller).
+    n-way partial sums inside the wire width (payloads clip to
+    `wire_limit(bits, shift)`, so the bound holds even at the
+    saturate-at-pow2-amax corner).  `amax` must already be the global max
+    across participating shards (pmax'ed by the caller).
+
+    The clip runs in f32, where wide limits (bits=32) are not exactly
+    representable — 2^30 - 1 would round UP to 2^30 and let payloads
+    escape the partial-sum bound — so the bound is lowered to the nearest
+    f32 at or below it (identical for bits <= 24).
     """
-    lim = 2.0 ** (bits - 1) - 1.0
+    lim = wire_limit(bits, shift)
+    limf = np.float32(lim)
+    if float(limf) > lim:                  # f32 rounded up: step back one ulp
+        limf = np.nextafter(limf, np.float32(0.0), dtype=np.float32)
     scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
-    data = jnp.clip(jnp.round(chunks / scale), -lim,
-                    lim).astype(payload_dtype(bits))
+    data = jnp.clip(jnp.round(chunks / scale), -limf,
+                    limf).astype(payload_dtype(bits))
     return QTensor(data, scale, bits)
 
 
@@ -55,7 +102,10 @@ def _ring_reduce_scatter(qt: QTensor, axis_name, n):
     after n-1 hops holds the fully reduced chunk r.  Every message on the
     wire is the integer payload dtype (int8/int16), never fp32.
     """
-    x_int, lim = qt.data, float(2.0 ** (qt.k - 1) - 1.0)
+    x_int = qt.data
+    # clip in the int32 domain: float bounds near 2^31 are not exactly
+    # representable in f32 and would promote the accumulator
+    lim = jnp.asarray(min(2 ** (qt.k - 1) - 1, 2 ** 31 - 1), jnp.int32)
     dtype = x_int.dtype
     idx = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -77,7 +127,7 @@ def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
     Returns the per-device shard of the mean, fp32.
     """
     n = mesh.shape[axis_name]
-    shift = max(0, math.ceil(math.log2(max(n, 1))))
+    shift = wire_shift(n)
 
     def f(xl):
         flat = xl.reshape(-1)
@@ -98,7 +148,7 @@ def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
 def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
     """integer-wire all-reduce mean = ring reduce-scatter + all-gather."""
     n = mesh.shape[axis_name]
-    shift = max(0, math.ceil(math.log2(max(n, 1))))
+    shift = wire_shift(n)
 
     def f(xl):
         shape = xl.shape
@@ -120,3 +170,63 @@ def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
     fn = _shard_map(f, mesh=mesh, in_specs=(spec,), out_specs=spec,
                     **_SM_KW)
     return fn(x)
+
+
+# --------------------------------------------------------------------------
+# in-body primitives (run INSIDE an enclosing shard_map)
+# --------------------------------------------------------------------------
+
+
+def ring_allreduce_int(x, axis_name: str, n: int, bits: int):
+    """Exact integer all-reduce-sum of per-device int32 contributions.
+
+    Ring reduce-scatter (messages in the `bits`-wide wire dtype) followed by
+    an integer all-gather.  The caller guarantees every partial sum fits the
+    wire width — the contract `wire_quantize` establishes via its shift/clip
+    — so the per-hop dtype cast never wraps and the sum is exact.  Must run
+    inside shard_map with `axis_name` manual; `n` is the axis size.
+    """
+    dtype = payload_dtype(bits)
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = -flat.size % n
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    acc = jnp.take(chunks, (idx - 1) % n, axis=0).astype(jnp.int32)
+
+    def hop(i, acc):
+        msg = lax.ppermute(acc.astype(dtype), axis_name, perm)
+        k = (idx - 2 - i) % n
+        return msg.astype(jnp.int32) + jnp.take(chunks, k, axis=0)
+
+    acc = lax.fori_loop(0, n - 1, hop, acc) if n > 1 else acc
+    full = lax.all_gather(acc, axis_name, axis=0).reshape(-1)
+    full = full[: flat.size - pad] if pad else full
+    return full.reshape(shape)
+
+
+def wire_sync_mean(g, axis_name: str, *, n_shards: int, n_dev: int,
+                   bits: int = 16):
+    """DP-invariant integer-wire mean of per-virtual-shard contributions.
+
+    g: (vs_local, *shape) f32 — this device's virtual-shard gradient
+    contributions.  Returns (*shape,) f32: the mean over all `n_shards`
+    virtual shards across the `axis_name` axis (size `n_dev`).
+
+    Bit-exactness contract (DESIGN.md §9): the ONE cross-device scale
+    reduction is the lax.pmax on the shard-local amax; payload rounding
+    happens per VIRTUAL shard against that shared pow2 scale with
+    shift = ceil(log2 n_shards) (a STATIC property of the algorithm, not of
+    the device layout), and both the local pre-sum and the ring are exact
+    integer additions.  Every quantity is therefore a pure function of
+    (n_shards, global batch) — how the virtual shards map onto devices
+    cannot change a single bit of the result.
+    """
+    shift = wire_shift(n_shards)
+    amax = lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+    qt = wire_quantize(g, amax, bits, shift)
+    local = jnp.sum(qt.data.astype(jnp.int32), axis=0)
+    total = ring_allreduce_int(local, axis_name, n_dev, bits)
+    return total.astype(jnp.float32) * qt.scale / n_shards

@@ -1,4 +1,41 @@
-"""Shared jaxpr-introspection helpers for the fused-kernel tests."""
+"""Shared jaxpr-introspection + numeric-tolerance helpers for the
+fused-kernel tests."""
+import numpy as np
+
+# Budget for XLA FMA-contraction divergence: interpret-mode Pallas and an
+# eagerly-structured oracle may contract the online-rescale mul+add chains
+# differently, each contraction worth <= 1 ulp.  16 ulps of headroom covers
+# the longest rescale chain in the flash kernel; it is a NAMED constant so
+# a tolerance regression is a visible diff, not a silently widened rtol.
+FMA_ULPS = 16
+
+
+def assert_allclose_fma(want, got, ulps: int = FMA_ULPS):
+    """allclose with an explicit FMA-contraction tolerance.
+
+    The tolerance is `ulps` last-place units of the comparison's own peak
+    magnitude — derived, not hand-tuned, so it cannot silently widen as the
+    test suite evolves.  Use ONLY for kernel-vs-oracle compares whose
+    divergence is program-structure FMA contraction; bit-exact contracts
+    use assert_array_equal (see assert_bitwise_oracle).
+    """
+    want = np.asarray(want)
+    got = np.asarray(got)
+    scale = float(np.max(np.abs(want))) or 1.0
+    atol = ulps * np.finfo(np.float32).eps * scale
+    np.testing.assert_allclose(got, want, rtol=0.0, atol=atol)
+
+
+def assert_bitwise_oracle(op_fn, ref_fn, *args, **kw):
+    """The dispatched op on this (CPU) backend must BE the oracle, bitwise.
+
+    Anchors the model-level route: whatever FMA tolerance the interpreted
+    kernel compare needs, the path models actually execute on CPU stays
+    bit-exact against the reference — so assert_allclose_fma can never
+    silently widen into the numbers training/serving sees.
+    """
+    np.testing.assert_array_equal(np.asarray(op_fn(*args, **kw)),
+                                  np.asarray(ref_fn(*args, **kw)))
 
 
 def collect_outside_pallas(jaxpr, out):

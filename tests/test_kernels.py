@@ -390,12 +390,16 @@ def test_paged_decode_attention_fused_bitexact_vs_gather_route():
     (2, 16, 2, 2, 16, 8, 4),      # uneven tile sizes
 ])
 def test_flash_attention_kernel_sweep(b, s, kv, g, dh, qc, kc):
-    """Kernel vs oracle on payload inputs.  The comparison is allclose at
-    ulp scale (not array_equal): the online-rescale mul+add chains are
-    subject to XLA FMA contraction, which interpret-mode Pallas and the
-    eagerly-structured oracle may apply differently.  The model-level
-    route (CPU dispatch -> oracle) is bit-exact vs the unfused path —
-    asserted below."""
+    """Kernel vs oracle on payload inputs.  The comparison is
+    assert_allclose_fma (an explicit, ULP-derived FMA-contraction budget —
+    jaxpr_utils.FMA_ULPS), never a hand-widened rtol: the online-rescale
+    mul+add chains are subject to XLA FMA contraction, which interpret-mode
+    Pallas and the eagerly-structured oracle may apply differently.  The
+    CPU-dispatched route models actually execute is anchored BITWISE to the
+    oracle in the same sweep, so the tolerance cannot leak into model
+    numbers."""
+    from jaxpr_utils import assert_allclose_fma, assert_bitwise_oracle
+    from repro.kernels.ops import flash_attention_op
     from repro.kernels.paged_attention import flash_attention
     r = np.random.default_rng(3)
     h = kv * g
@@ -415,11 +419,15 @@ def test_flash_attention_kernel_sweep(b, s, kv, g, dh, qc, kc):
     want = ref.flash_attention_ref(q8, k8, v8, qp, kp, kval, *scal, **kw)
     got = flash_attention(q8, k8, v8, qp, kp, kval, *scal, **kw,
                           interpret=True)
-    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
-                               rtol=2e-6, atol=2e-7)
+    assert_allclose_fma(want, got)
+    # the dispatched (CPU -> oracle) path IS the reference, bit for bit
+    assert_bitwise_oracle(flash_attention_op, ref.flash_attention_ref,
+                          q8, k8, v8, qp, kp, kval, *scal, **kw)
 
 
 def test_flash_attention_noncausal_matches_ref():
+    from jaxpr_utils import assert_allclose_fma, assert_bitwise_oracle
+    from repro.kernels.ops import flash_attention_op
     from repro.kernels.paged_attention import flash_attention
     r = np.random.default_rng(5)
     b, s, kv, g, dh = 2, 8, 2, 1, 8
@@ -434,8 +442,9 @@ def test_flash_attention_noncausal_matches_ref():
     want = ref.flash_attention_ref(q8, k8, v8, pos, pos, kval, *scal, **kw)
     got = flash_attention(q8, k8, v8, pos, pos, kval, *scal, **kw,
                           interpret=True)
-    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
-                               rtol=2e-6, atol=2e-7)
+    assert_allclose_fma(want, got)
+    assert_bitwise_oracle(flash_attention_op, ref.flash_attention_ref,
+                          q8, k8, v8, pos, pos, kval, *scal, **kw)
 
 
 def test_chunked_attention_fused_bitexact_and_grads():

@@ -410,6 +410,158 @@ def test_native_qtensor_operand_matches_array_operand():
     np.testing.assert_array_equal(np.asarray(y_qt), np.asarray(y_arr))
 
 
+# --------------------------------------------------------------------------
+# quantizer algebra: property-based invariants
+# --------------------------------------------------------------------------
+#
+# Each invariant is a plain checker; a deterministic seeded sweep (plus the
+# known adversarial corners) ALWAYS runs, and when the optional `hypothesis`
+# extra is installed the same checkers also run under generated inputs.
+# Scope of the idempotence law: quantizers with a FIXED grid (direct, clip)
+# are projections — Q(Q(x)) == Q(x) unconditionally.  amax-scaled kinds
+# (scaled/sq/grid/flag) re-derive their pow2 scale from the output, and at
+# the saturate-at-pow2-amax corner the re-derived scale can shrink a notch
+# and clip the top value (the same corner DESIGN.md §8 documents for the
+# flash kernel's in-register decompositions) — for those the law holds
+# exactly whenever the re-derived scale is unchanged, which the checkers
+# condition on.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # optional dev extra; sweeps below still run
+    HAVE_HYPOTHESIS = False
+
+_FIXED_GRID = [("direct", 8), ("direct", 4), ("clip", 8), ("clip", 6)]
+_AMAX_SCALED = [("scaled", 8), ("sq", 8), ("sq", 16), ("grid", 8),
+                ("flag", 8)]
+
+
+def _scale_of(qt):
+    return float(qt.scale) if qt.lo is None else (float(qt.scale),
+                                                  float(qt.lo_scale))
+
+
+def check_idempotent_fixed(kind, k, x):
+    q = get_quantizer(kind, k)
+    y = q(x)
+    np.testing.assert_array_equal(np.asarray(q(y)), np.asarray(y))
+
+
+def check_idempotent_scaled(kind, k, x):
+    """Q(Q(x)) == Q(x) whenever the re-derived pow2 scale is unchanged."""
+    q = get_quantizer(kind, k)
+    y = q.dequantize(q.quantize(x))
+    if _scale_of(q.quantize(y)) != _scale_of(q.quantize(x)):
+        return False               # saturate-at-pow2-amax corner: excluded
+    np.testing.assert_array_equal(np.asarray(q(y)), np.asarray(y))
+    return True
+
+
+def check_pow2_closure(kind, k, x):
+    """Every scale a quantizer emits is an exact power of two."""
+    key = jax.random.PRNGKey(5) if kind == "cq" else None
+    qt = get_quantizer(kind, k).quantize(x, key=key)
+    for s in ([qt.scale] if qt.lo is None else [qt.scale, qt.lo_scale]):
+        m, _ = np.frexp(np.float32(s))
+        assert m == 0.5, (kind, k, float(s))
+
+
+def check_wire_overflow(n, bits, x):
+    """n-way partial sums of wire payloads never exceed the wire width.
+
+    wire_quantize clips payloads to wire_limit(bits, shift) with
+    shift = ceil(log2 n), so ANY subset sum of n contributions fits the
+    signed `bits`-wide dtype — the property the integer ring's per-hop
+    dtype cast relies on (runtime/compress.py).  Fan-ins the wire cannot
+    carry (n > 2^(bits-2)) must refuse loudly instead of zeroing payloads.
+    """
+    from repro.runtime import wire_limit, wire_quantize, wire_shift
+    shift = wire_shift(n)
+    if shift > bits - 2:
+        with pytest.raises(ValueError):
+            wire_limit(bits, shift)
+        return
+    chunks = jnp.stack([x * (i + 1) / n for i in range(n)])
+    qt = wire_quantize(chunks, jnp.max(jnp.abs(chunks)), bits, shift)
+    lim = wire_limit(bits, shift)
+    assert n * lim < 2.0 ** (bits - 1)          # static bound
+    peak = np.abs(np.asarray(qt.data, np.int64)).max() if x.size else 0
+    assert peak <= lim
+    total = np.abs(np.asarray(qt.data, np.int64).sum(0)).max() \
+        if x.size else 0
+    assert total < 2.0 ** (bits - 1)
+    assert np.asarray(qt.data).dtype == (np.int8 if bits <= 8 else np.int16
+                                         if bits <= 16 else np.int32)
+
+
+def _sweep_arrays():
+    corners = [
+        jnp.asarray([0.2500001, -0.125], jnp.float32),   # pow2-amax corner
+        jnp.asarray([1.0, 0.5, 2.0 ** -7], jnp.float32),
+        jnp.asarray([0.0, 0.0], jnp.float32),
+        jnp.asarray([2.0000001], jnp.float32),
+    ]
+    rng = np.random.default_rng(11)
+    rand = [jnp.asarray(rng.normal(size=17) * 10.0 ** rng.uniform(-3, 1),
+                        jnp.float32) for _ in range(12)]
+    return corners + rand
+
+
+def test_fixed_grid_quantizers_idempotent_sweep():
+    for kind, k in _FIXED_GRID:
+        for x in _sweep_arrays():
+            check_idempotent_fixed(kind, k, x)
+
+
+def test_amax_scaled_quantizers_idempotent_sweep():
+    hits = 0
+    for kind, k in _AMAX_SCALED:
+        for x in _sweep_arrays():
+            hits += bool(check_idempotent_scaled(kind, k, x))
+    assert hits > len(_AMAX_SCALED)     # the law must actually be exercised
+
+
+def test_pow2_scale_closure_sweep():
+    for kind, k in _FIXED_GRID + _AMAX_SCALED + [("none", 16), ("cq", 15)]:
+        for x in _sweep_arrays():
+            check_pow2_closure(kind, k, x)
+
+
+def test_wire_overflow_bound_sweep():
+    for n in (1, 2, 3, 8, 17, 64, 256):
+        for bits in (8, 16, 32):
+            for x in _sweep_arrays()[:6]:
+                check_wire_overflow(n, bits, x)
+
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile("qt_fast", max_examples=25, deadline=None)
+    settings.load_profile("qt_fast")
+
+    def _h_arrays():
+        return st.lists(st.floats(-8.0, 8.0, allow_nan=False, width=32),
+                        min_size=1, max_size=64).map(
+            lambda v: jnp.asarray(v, jnp.float32))
+
+    @given(_h_arrays(), st.sampled_from(_FIXED_GRID))
+    def test_hyp_fixed_grid_idempotent(x, kk):
+        check_idempotent_fixed(*kk, x)
+
+    @given(_h_arrays(), st.sampled_from(_AMAX_SCALED))
+    def test_hyp_amax_scaled_idempotent(x, kk):
+        check_idempotent_scaled(*kk, x)
+
+    @given(_h_arrays(),
+           st.sampled_from(_FIXED_GRID + _AMAX_SCALED + [("cq", 15)]))
+    def test_hyp_pow2_closure(x, kk):
+        check_pow2_closure(*kk, x)
+
+    @given(_h_arrays(), st.integers(1, 256), st.sampled_from([8, 16, 32]))
+    def test_hyp_wire_overflow(x, n, bits):
+        check_wire_overflow(n, bits, x)
+
+
 def test_frozen_qtensor_gets_no_gradient():
     """QTensors without a carrier (the int8 KV cache) are consumed but
     non-differentiable; gradients still flow to the other operand."""

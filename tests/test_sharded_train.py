@@ -1,0 +1,258 @@
+"""Sharded DP×TP training: bit-exactness + integer-wire acceptance suite.
+
+The headline contract (DESIGN.md §9): the sharded step is parameterized by
+`n_shards` (quantization granularity), NOT by the device layout — so with
+the global batch fixed, training on 1 device and on 8 simulated host
+devices produces bit-identical quantized weights, because per-virtual-shard
+payload rounding happens against a globally pmax'ed pow2 scale and every
+cross-device gradient reduction is an exact integer sum.
+
+All multi-device tests run in subprocesses: the virtual device count must
+be set via XLA_FLAGS before jax initializes.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, timeout: int = 1500) -> str:
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=_ROOT)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    return r.stdout
+
+
+_PRELUDE = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import ArchConfig
+    from repro.core import preset
+    from repro.data import TokenTask, ImageTask
+    from repro.launch import shard as S
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.train import make_sharded_train_step, make_train_step
+    from repro.models import build_model
+    from repro.optim import init_momentum
+
+    ARCHS = {
+      "lm": ArchConfig(name="t-lm", family="lm", n_layers=2, d_model=32,
+                       n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16,
+                       q_chunk=16, kv_chunk=16),
+      "moe": ArchConfig(name="t-moe", family="moe", n_layers=2, d_model=32,
+                        n_heads=2, n_kv=2, d_ff=48, vocab=64, head_dim=16,
+                        q_chunk=16, kv_chunk=16, moe_experts=4, moe_topk=2),
+      "resnet": ArchConfig(name="t-rn", family="resnet", block="basic",
+                           stage_sizes=(1,), num_classes=10, img_size=16),
+    }
+
+    def task_for(name, a, batch=8):
+        if name == "resnet":
+            return ImageTask(img_size=a.img_size,
+                             num_classes=a.num_classes, global_batch=batch)
+        return TokenTask(vocab=a.vocab, seq_len=16, global_batch=batch)
+
+    def train(name, pname, dp, tp=1, steps=2, n_shards=8, **kw):
+        a = ARCHS[name]
+        mesh = make_cpu_mesh(dp, tp)
+        qcfg = preset(pname, "native")
+        model = build_model(a, qcfg, tp_size=tp)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = (S.zero_init_momentum(params, dp)
+               if kw.get("opt_shard") == "zero1" else init_momentum(params))
+        step_raw, specs = make_sharded_train_step(
+            model, qcfg, model.labels(params), mesh, params,
+            n_shards=n_shards, **kw)
+        step = jax.jit(step_raw)
+        params = S.shard_arrays(mesh, params, specs["params"])
+        opt = S.shard_arrays(mesh, opt, specs["opt"])
+        task = task_for(name, a)
+        losses = []
+        for s in range(steps):
+            batch = S.put_batch(mesh, task.batch(s))
+            params, opt, m = step(params, opt, batch, jnp.int32(s))
+            losses.append(float(m["loss"]))
+        return jax.device_get(params), jax.device_get(opt), losses
+
+    def diff(pa, pb):
+        return [jax.tree_util.keystr(p) for (p, a), (_, b) in
+                zip(jax.tree_util.tree_leaves_with_path(pa),
+                    jax.tree_util.tree_leaves_with_path(pb))
+                if not np.array_equal(np.asarray(a), np.asarray(b))]
+""")
+
+
+_SWEEP_PROG = _PRELUDE + textwrap.dedent("""
+    # DP-invariance sweep: 1 device vs 8 simulated host devices, bitwise on
+    # EVERY param leaf AND the Momentum accumulator, per family x preset.
+    for name in ("lm", "moe", "resnet"):
+        for pname in ("full8", "e2_16"):
+            p1, o1, _ = train(name, pname, dp=1)
+            p8, o8, _ = train(name, pname, dp=8)
+            bad = diff(p1, p8) + diff(o1.acc, o8.acc)
+            assert not bad, (name, pname, bad)
+            print("OK", name, pname)
+    # an intermediate layout (dp=2, 4 virtual shards per device)
+    p1, o1, _ = train("lm", "full8", dp=1)
+    p2, o2, _ = train("lm", "full8", dp=2)
+    assert not (diff(p1, p2) + diff(o1.acc, o2.acc))
+    print("OK lm dp2")
+    # int8 wire: coarser grid, same invariance
+    pa, _, _ = train("lm", "full8", dp=1, wire_bits=8)
+    pb, _, _ = train("lm", "full8", dp=8, wire_bits=8)
+    assert not diff(pa, pb)
+    print("OK lm wire8")
+    print("SWEEP_OK")
+""")
+
+
+_TP_ZERO1_PROG = _PRELUDE + textwrap.dedent("""
+    # manual TP: same n_shards, dp varies with tp=2 fixed -> still bitwise
+    pa, oa, la = train("lm", "full8", dp=1, tp=2)
+    pb, ob, lb = train("lm", "full8", dp=4, tp=2)
+    assert not (diff(pa, pb) + diff(oa.acc, ob.acc))
+    assert np.isfinite(la).all()
+    print("OK tp2 dp-invariance")
+
+    # ZeRO-1: accumulator sharded as flat chunks; updates are elementwise,
+    # so the result is bitwise identical to the replicated optimizer (the
+    # gradient quantization runs on the full leaf before chunking)
+    pr, _, _ = train("lm", "full8", dp=1)
+    pz, _, _ = train("lm", "full8", dp=2, opt_shard="zero1")
+    assert not diff(pr, pz)
+    print("OK zero1")
+    print("TPZ_OK")
+""")
+
+
+_LOSS_CURVE_PROG = _PRELUDE + textwrap.dedent("""
+    # Sharded-vs-unsharded 5-step loss curves.  NOT bitwise: the sharded
+    # algorithm quantizes at per-virtual-shard amax granularity and syncs
+    # on the integer wire — but the curves must track closely and train.
+    a = ARCHS["lm"]
+    qcfg = preset("full8", "native")
+    model = build_model(a, qcfg)
+    params0 = model.init(jax.random.PRNGKey(0))
+    labels = model.labels(params0)
+    task = task_for("lm", a)
+
+    step_u = jax.jit(make_train_step(model, qcfg, labels))
+    p, o = params0, init_momentum(params0)
+    unsharded = []
+    for s in range(5):
+        batch = jax.tree.map(jnp.asarray, task.batch(s))
+        p, o, m = step_u(p, o, batch, jnp.int32(s))
+        unsharded.append(float(m["loss"]))
+
+    _, _, sharded = train("lm", "full8", dp=4, steps=5, n_shards=4)
+    deltas = [abs(x - y) for x, y in zip(unsharded, sharded)]
+    assert max(deltas) < 0.15, (unsharded, sharded)
+    assert sharded[-1] < sharded[0] + 0.05, sharded
+    print("LOSS_OK", max(deltas))
+""")
+
+
+_JAXPR_PROG = _PRELUDE + textwrap.dedent("""
+    # Integer-wire acceptance on the traced step: gradients cross devices
+    # as integer payloads ONLY.  Scalar float collectives are the wire's
+    # pmax'ed scale and the loss-metric mean; everything tensor-shaped on
+    # the wire (ppermute hops, all_gathers) must be integer dtype.  The
+    # f32 "psum" baseline is the positive control for the detector.
+    from repro.kernels import ops
+
+    def trace(grad_sync):
+        a = ARCHS["lm"]
+        mesh = make_cpu_mesh(4, 1)
+        qcfg = preset("full8", "native")
+        model = build_model(a, qcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = init_momentum(params)
+        step_raw, _ = make_sharded_train_step(
+            model, qcfg, model.labels(params), mesh, params, n_shards=8,
+            grad_sync=grad_sync)
+        batch = jax.tree.map(jnp.asarray, task_for("lm", a).batch(0))
+        return jax.make_jaxpr(step_raw)(params, opt, batch, jnp.int32(0))
+
+    colls = ops.collective_eqns(trace("int_ring").jaxpr)
+    assert colls, "no collectives found — detector broken?"
+    floats = [c for c in colls if c[2] is not None
+              and jnp.issubdtype(c[2], jnp.floating)]
+    assert all(c[1] == () for c in floats), \\
+        [c for c in floats if c[1] != ()]
+    wires = [c for c in colls if c[0] in ("ppermute", "all_gather")]
+    assert wires and all(jnp.issubdtype(c[2], jnp.integer) for c in wires), \\
+        wires
+    assert any(c[0] == "ppermute" and c[2] == jnp.int16 for c in colls)
+
+    # positive control: the f32-wire baseline DOES all-reduce float tensors
+    base = ops.collective_eqns(trace("psum").jaxpr)
+    assert any(c[0] == "psum" and c[1] != ()
+               and jnp.issubdtype(c[2], jnp.floating) for c in base)
+    print("JAXPR_OK")
+""")
+
+
+def test_dp_invariance_sweep():
+    """1-dev vs 8-dev bit-exactness: full8 x e2_16 over lm/moe/resnet, plus
+    the dp=2 mixed layout and the int8 wire."""
+    out = _run(_SWEEP_PROG)
+    assert "SWEEP_OK" in out, out
+
+
+def test_tp_and_zero1_bitexact():
+    """Manual TP keeps DP-invariance; ZeRO-1 == replicated optimizer."""
+    out = _run(_TP_ZERO1_PROG)
+    assert "TPZ_OK" in out, out
+
+
+def test_sharded_vs_unsharded_loss_curves():
+    out = _run(_LOSS_CURVE_PROG)
+    assert "LOSS_OK" in out, out
+
+
+def test_sharded_backward_integer_wire_only():
+    out = _run(_JAXPR_PROG)
+    assert "JAXPR_OK" in out, out
+
+
+def test_shard_spec_rules_single_process():
+    """Spec rules are pure metadata — no devices needed."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import ArchConfig
+    from repro.core import preset
+    from repro.launch.shard import (tp_param_specs, zero_chunk_len,
+                                    zero_init_momentum)
+    from repro.models import build_model
+
+    a = ArchConfig(name="t-lm", family="lm", n_layers=2, d_model=32,
+                   n_heads=2, n_kv=2, d_ff=64, vocab=64, head_dim=16,
+                   q_chunk=16, kv_chunk=16)
+    qcfg = preset("full8", "native")
+    model = build_model(a, qcfg, tp_size=2)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = tp_param_specs(model, params)
+    assert specs["layers"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["wo"] == P(None, "model", None)
+    assert specs["layers"]["w_down"] == P(None, "model", None)
+    assert specs["embed"] == P() and specs["final_norm"] == P()
+    # tp_size=1 -> everything replicated
+    m1 = build_model(a, qcfg)
+    assert all(s == P() for s in
+               jax.tree.leaves(tp_param_specs(m1, params),
+                               is_leaf=lambda x: isinstance(x, P)))
+    # indivisible heads refuse manual TP
+    import pytest
+    with pytest.raises(ValueError):
+        build_model(a, qcfg, tp_size=3)
+    # ZeRO accumulator layout: flat, padded to dp equal chunks
+    params_c = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), params)
+    st = zero_init_momentum(params_c, dp=4)
+    for p, acc in zip(jax.tree.leaves(params_c), jax.tree.leaves(st.acc)):
+        assert acc.shape == (4 * zero_chunk_len(p.size, 4),)
