@@ -6,17 +6,28 @@ either way, so the delta isolates the page-gather traffic the fused kernel
 removes).
 
 CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
-  serve/rate<r>        — us per fused decode step; decode tok/s, mean/max
-                         TTFT, preemptions under rate r req/s
-  serve/naive          — us per decode step of one-request-at-a-time serving
-  serve/speedup        — engine-vs-naive aggregate decode tok/s ratio
-  serve/pool           — int8-vs-fp32 footprint ratio + resident-seq capacity
-  serve/fused_ctx<N>   — us per decode step at max_ctx=N, fused route
-  serve/unfused_ctx<N> — same engine load, gather-then-attend route
-  serve/decode_fusion  — fused-vs-unfused step-time ratio at the largest
-                         context config
-  serve/decode_path    — fused_active=True/False per route, from the
-                         decode-step jaxpr (CI fails on a silent fallback)
+  serve/rate<r>         — us per fused decode step; decode tok/s, mean/max
+                          TTFT, preemptions under rate r req/s
+  serve/rate<r>_chunked — same load through the chunked-prefill engine
+                          (one jit-stable prefill trace for every prompt
+                          length instead of a compile per length — the
+                          TTFT lever)
+  serve/ttft_breakdown  — TTFT split queue_ms vs prefill_ms at the middle
+                          rate, one row per prefill mode (both polarities:
+                          mode=monolithic and mode=chunked; CI greps both)
+  serve/prefix_hit      — radix-cache sweep over sharing {0, 0.5, 0.9}:
+                          hit_rate, tok/s, mean TTFT per sharing level
+                          (CI greps the sharing=0 and sharing=0.9 rows)
+  serve/naive           — us per decode step of one-request-at-a-time serving
+  serve/speedup         — engine-vs-naive aggregate decode tok/s ratio
+  serve/pool            — int8-vs-fp32 footprint ratio + resident-seq
+                          capacity
+  serve/fused_ctx<N>    — us per decode step at max_ctx=N, fused route
+  serve/unfused_ctx<N>  — same engine load, gather-then-attend route
+  serve/decode_fusion   — fused-vs-unfused step-time ratio at the largest
+                          context config
+  serve/decode_path     — fused_active=True/False per route, from the
+                          decode-step jaxpr (CI fails on a silent fallback)
 
 Scale knobs: REPRO_BENCH_FAST halves the request count and drops the
 highest rate + largest context; the arch is the reduced granite-3-8b (CPU
@@ -91,12 +102,13 @@ def main():
     from repro.core import preset
     from repro.models import build_model
     from repro.serving import (Engine, naive_serve, poisson_traffic,
-                               run_load)
+                               run_load, shared_prefix_traffic)
 
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
     n_requests = 6 if fast else 12
     rates = (4.0, 16.0) if fast else (4.0, 16.0, 64.0)
     gen_lens = (4, 8) if fast else (4, 8, 12)
+    mid_rate = 16.0
 
     model = build_model(get(ARCH).reduced(), preset("full8", "native"))
     params = model.init(jax.random.PRNGKey(0))
@@ -108,18 +120,53 @@ def main():
 
     engine_tokps = 0.0
     pool_rep = None
-    for rate in rates:
-        engine = Engine(model, params, max_lanes=4, page_size=8, max_ctx=48)
-        _, m = run_load(engine, traffic_at(rate))
+    breakdown = {}                       # mode -> metrics at mid_rate
+    for mode in ("monolithic", "chunked"):
+        suffix = "" if mode == "monolithic" else "_chunked"
+        for rate in rates:
+            engine = Engine(model, params, max_lanes=4, page_size=8,
+                            max_ctx=48, prefill_mode=mode, prefill_chunk=2)
+            _, m = run_load(engine, traffic_at(rate))
+            us = (m["decode_wall_s"] / max(1, m["decode_steps"])) * 1e6
+            emit(f"serve/rate{rate:g}{suffix}", us,
+                 f"tokps={m['decode_tok_s']:.2f};"
+                 f"ttft_ms_mean={m['ttft_mean_s'] * 1e3:.1f};"
+                 f"ttft_ms_max={m['ttft_max_s'] * 1e3:.1f};"
+                 f"steps={m['decode_steps']};preempt={m['preemptions']};"
+                 f"straggler={m['straggler_steps']}")
+            if rate == mid_rate:
+                breakdown[mode] = m
+            if mode == "monolithic":
+                engine_tokps = max(engine_tokps, m["decode_tok_s"])
+                pool_rep = m.get("pool", pool_rep)
+    for mode, m in breakdown.items():   # both polarities — CI greps each
+        emit("serve/ttft_breakdown", 0.0,
+             f"mode={mode};rate={mid_rate:g};"
+             f"queue_ms={m['queue_ms_mean']:.1f};"
+             f"prefill_ms={m['prefill_ms_mean']:.1f};"
+             f"ttft_ms_mean={m['ttft_mean_s'] * 1e3:.1f}")
+
+    # radix prefix-cache sweep: same arrival process, rising fractions of
+    # prompts opening with a common 2-page prefix (prompts are short, so a
+    # fixed request count keeps hit-rate statistics comparable across
+    # fast/full runs)
+    for sharing in (0.0, 0.5, 0.9):
+        engine = Engine(model, params, max_lanes=4, page_size=8, max_ctx=48,
+                        prefill_mode="chunked", prefill_chunk=2,
+                        radix_cache=True)
+        traffic = shared_prefix_traffic(rate=mid_rate, n_requests=12,
+                                        sharing=sharing, prefix_len=16,
+                                        n_prefixes=1, tail_lens=(4, 8),
+                                        gen_lens=gen_lens, seed=7)
+        _, m = run_load(engine, traffic)
         us = (m["decode_wall_s"] / max(1, m["decode_steps"])) * 1e6
-        emit(f"serve/rate{rate:g}", us,
+        emit("serve/prefix_hit", us,
+             f"sharing={sharing:g};hit_rate={m['prefix_hit_rate']:.2f};"
              f"tokps={m['decode_tok_s']:.2f};"
              f"ttft_ms_mean={m['ttft_mean_s'] * 1e3:.1f};"
-             f"ttft_ms_max={m['ttft_max_s'] * 1e3:.1f};"
-             f"steps={m['decode_steps']};preempt={m['preemptions']};"
-             f"straggler={m['straggler_steps']}")
-        engine_tokps = max(engine_tokps, m["decode_tok_s"])
-        pool_rep = m.get("pool", pool_rep)
+             f"queue_ms={m['queue_ms_mean']:.1f};"
+             f"prefill_ms={m['prefill_ms_mean']:.1f};"
+             f"shared_pages={m['pool']['shared_pages']}")
 
     _, nm = naive_serve(model, params, traffic_at(rates[0]))
     n_us = (nm["decode_wall_s"] / max(1, nm["decode_steps"])) * 1e6

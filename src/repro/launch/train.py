@@ -283,6 +283,93 @@ def make_paged_decode_step(model, sampler, k_scale=None, v_scale=None,
     return step
 
 
+def make_chunked_prefill_step(model, chunk_pages: int, k_scale=None,
+                              v_scale=None):
+    """Chunked-prefill step for the serving engine (DESIGN.md §10).
+
+    step(params, dense, k_pages, v_pages, table_row, tokens, start_page,
+    n_pages) -> (dense, k_pages, v_pages, last_logits, page_snaps).
+
+    ONE jit-stable trace processes up to `chunk_pages` FULL pages of a
+    single lane's prompt: tokens is a fixed (chunk_pages * page,) block,
+    `start_page` the first logical block index, `n_pages` the total full
+    prompt pages — pages past it are masked (their table view zeroes to
+    the trash page and their state/logit updates are discarded), so the
+    same trace serves every chunk including the ragged last one.  The
+    pages advance via an in-trace lax.scan — no host round-trip per page —
+    and each page's numerics are scoped to that page (the radix cache's
+    bitwise-determinism unit).  `page_snaps` stacks the dense state AFTER
+    each page (leading axis chunk_pages): the page-boundary snapshots the
+    radix tree stores for recurrent families.  `last_logits` carries the
+    final ACTIVE page's last-token logits for first-token sampling of
+    page-aligned prompts.
+    """
+    paged = model.decode_state_spec()["kv_layers"] > 0
+
+    def step(params, dense, k_pages, v_pages, table_row, tokens,
+             start_page, n_pages):
+        page = tokens.shape[0] // chunk_pages
+        toks = tokens.reshape(chunk_pages, page)
+
+        def body(carry, inp):
+            dn, kp, vp, lg = carry
+            j, tj = inp
+            active = start_page + j < n_pages
+            view = None
+            if paged:
+                eff = jnp.where(active, table_row,
+                                jnp.zeros_like(table_row))
+                view = {"k_pages": kp, "v_pages": vp, "k_scale": k_scale,
+                        "v_scale": v_scale, "table": eff}
+            lg2, dn2, pages = model.prefill_page(
+                params, dn, view, tj, (start_page + j) * page)
+            dn2 = jax.tree.map(lambda a, b: jnp.where(active, a, b),
+                               dn2, dn)
+            lg = jnp.where(active, lg2, lg)
+            if paged:
+                kp, vp = pages["k_pages"], pages["v_pages"]
+            return (dn2, kp, vp, lg), dn2
+
+        lg0 = jnp.zeros((1, model.a.vocab_padded), jnp.float32)
+        (dn, kp, vp, lg), snaps = lax.scan(
+            body, (dense, k_pages, v_pages, lg0),
+            (jnp.arange(chunk_pages), toks))
+        return dn, kp, vp, lg, snaps
+
+    return step
+
+
+def make_prefill_token_step(model, k_scale=None, v_scale=None):
+    """Single-token prefill append for the ragged prompt tail (< one page).
+
+    step(params, dense, k_pages, v_pages, table_row, token, pos) ->
+    (dense, k_pages, v_pages, logits).  Reuses the model's fused decode
+    body at B=1 — writes the token's KV at `pos` through the lane's table
+    row and advances recurrent state — but sampling stays with the caller
+    (only the LAST tail token's logits feed the first sample).  One trace
+    regardless of tail length; position-deterministic, so tail tokens
+    inherit the same recompute-exactness as full pages (they are simply
+    never published to the radix tree).
+    """
+    paged = model.decode_state_spec()["kv_layers"] > 0
+
+    def step(params, dense, k_pages, v_pages, table_row, token, pos):
+        slots = dict(dense, pos=pos)
+        view = None
+        if paged:
+            view = {"k_pages": k_pages, "v_pages": v_pages,
+                    "k_scale": k_scale, "v_scale": v_scale,
+                    "table": table_row}
+        logits, new_slots, pages = model.paged_decode_step(
+            params, slots, view, token)
+        new_dense = dict(new_slots, pos=dense["pos"])   # engine owns pos
+        if paged:
+            return new_dense, pages["k_pages"], pages["v_pages"], logits
+        return new_dense, k_pages, v_pages, logits
+
+    return step
+
+
 def make_prefill(model, shape_name):
     from repro.configs.base import LM_SHAPES
     s, b, _ = LM_SHAPES[shape_name]

@@ -40,6 +40,22 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
                                 kv_chunk=acfg.kv_chunk)
         new_cache = (L.kv_quantize(kh, 2.0 ** -7),
                      L.kv_quantize(vh, 2.0 ** -7))
+    elif mode == "chunk":
+        # chunked prefill: one lane, one full pool page of positions (see
+        # transformer._attn / DESIGN.md §10 — page-scoped amaxes make the
+        # written KV a pure function of the token prefix)
+        qh = L.rope(qh, pos, acfg.rope_theta)
+        kh = L.rope(kh, pos, acfg.rope_theta)
+        qh, kh, vh = (qact(cfg, "none", t) for t in (qh, kh, vh))
+        ks, vs = cache["k_scale"], cache["v_scale"]
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        table = cache["table"]
+        pid = table[0, pos[0] // kp.shape[1]]
+        kp = L.page_write(kp, pid, L.kv_quantize(kh[0], ks))
+        vp = L.page_write(vp, pid, L.kv_quantize(vh[0], vs))
+        o = L.paged_prefill_attention(cfg, qh, kp, vp, table, ks, vs,
+                                      q_pos=pos)
+        new_cache = (kp, vp)
     else:
         pvec = pos
         qh = jax.vmap(lambda xi, pi: L.rope(xi, pi[None], acfg.rope_theta))(
@@ -168,7 +184,7 @@ class Zamba2:
 
             def mbody(h, xs):
                 lp, sc, sh = xs
-                h2, ns = S.mamba2_block(q, a, lp, h, "decode",
+                h2, ns = S.mamba2_block(q, a, lp, h, mode,
                                         {"conv": sc, "h": sh})
                 return h2, (ns["conv"], ns["h"])
             return L.lscan(a, mbody, x,
@@ -192,7 +208,7 @@ class Zamba2:
                 x, t_states = L.lscan(a, tbody, x, tail)
             return x, (g_states, g_kv, t_states)
 
-        # decode
+        # decode (s==1, per-lane positions) or chunk (one lane, one page)
         paged = "k_pages" in cache
 
         def gbody(h, xs):
@@ -206,7 +222,7 @@ class Zamba2:
             else:
                 lc = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
                       "v_scale": cache["v_scale"][0]}
-            h, (nk, nv) = _attn_shared(q, a, shared, h, pos, "decode", lc)
+            h, (nk, nv) = _attn_shared(q, a, shared, h, pos, mode, lc)
             return h, (nc, nh, nk, nv)
 
         g, ae = self.n_groups, a.attn_every
@@ -222,7 +238,7 @@ class Zamba2:
         if self.tail:
             def tbody(h, xs):
                 lp, sc, sh = xs
-                h2, ns = S.mamba2_block(q, a, lp, h, "decode",
+                h2, ns = S.mamba2_block(q, a, lp, h, mode,
                                         {"conv": sc, "h": sh})
                 return h2, (ns["conv"], ns["h"])
             x, (tc, th) = L.lscan(
@@ -232,10 +248,11 @@ class Zamba2:
             nh = jnp.concatenate([nh, th], 0)
         if paged:
             new_cache = dict(cache, m_conv=nc, m_h=nh, k_pages=nk,
-                             v_pages=nv, pos=cache["pos"] + 1)
+                             v_pages=nv)
         else:
-            new_cache = dict(cache, m_conv=nc, m_h=nh, k=nk, v=nv,
-                             pos=cache["pos"] + 1)
+            new_cache = dict(cache, m_conv=nc, m_h=nh, k=nk, v=nv)
+        if mode == "decode":
+            new_cache["pos"] = cache["pos"] + 1
         return x, new_cache
 
     def _logits(self, params, x):
@@ -337,6 +354,24 @@ class Zamba2:
         logits = self._logits(params, x)[:, 0]
         return logits, {"m_conv": nc["m_conv"], "m_h": nc["m_h"],
                         "pos": slots["pos"]}, \
+            {"k_pages": nc["k_pages"], "v_pages": nc["v_pages"]}
+
+    def prefill_page(self, params, dense, pool_view, tokens, pos0):
+        """Chunked prefill: one page of one lane's prompt (see
+        LMTransformer.prefill_page).  Mamba states advance through the
+        page via the train-style 'chunk' scan seeded from `dense`; the
+        shared-attention KV page lands in the pool.  The returned dense
+        values are the page-boundary state snapshot the radix cache stores
+        per node — restoring it on a prefix hit reproduces the recurrent
+        state bitwise (same pure function of the same token prefix)."""
+        page = pool_view["k_pages"].shape[2]
+        x = params["embed"][tokens][None]               # (1, page, d)
+        pos = pos0 + jnp.arange(page)
+        cache = dict(pool_view, m_conv=dense["m_conv"], m_h=dense["m_h"])
+        x, nc = self._backbone(params, x, pos, "chunk", cache)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, {"m_conv": nc["m_conv"], "m_h": nc["m_h"],
+                        "pos": dense["pos"]}, \
             {"k_pages": nc["k_pages"], "v_pages": nc["v_pages"]}
 
     def batch_pspec(self):

@@ -384,6 +384,45 @@ def paged_decode_attention(cfg: QConfig, q, k_pages, v_pages, table, k_scale,
                             t_valid=t_valid)
 
 
+def paged_prefill_attention(cfg: QConfig, q, k_pages, v_pages, table,
+                            k_scale, v_scale, *, q_pos: Array) -> Array:
+    """One PAGE of prefill attention against the paged int8 cache (one
+    layer, one lane): the chunked-prefill data path (DESIGN.md §10).
+
+    q: (1, S, H, dh) — S = page_size query tokens of a single lane whose
+    KV page was just written into the pool; q_pos: (S,) their absolute
+    positions.  k_pages/v_pages: (P, page, KV, dh) int8; table: (1, NB).
+    Gathers the lane's pages (the current page included) and applies the
+    per-position causal mask — positions beyond q_pos belong to pages not
+    yet written this prefill and are masked, so stale arena contents never
+    leak in.  Numerics mirror `decode_attention` (normalized probabilities
+    onto the k_A grid); every amax spans only this lane's single page, so
+    the output is a pure function of (prefix tokens, page tokens) — the
+    determinism the radix cache's bitwise-hit contract rests on.
+    """
+    from repro.kernels.ops import page_gather_op
+    b, s, h, dh = q.shape
+    page = k_pages.shape[1]
+    nb = table.shape[1]
+    kv = k_pages.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+    k8 = page_gather_op(k_pages, table).reshape(
+        b, nb * page, *k_pages.shape[2:])
+    v8 = page_gather_op(v_pages, table).reshape(
+        b, nb * page, *v_pages.shape[2:])
+    qr = q.reshape(b, s, kv, g, dh)
+    sc = _attn_scores(cfg, qr, kv_qtensor(k8, k_scale)) * scale
+    kp = jnp.arange(nb * page)                       # (B,S,KV,G,T)
+    mask = q_pos[:, None] >= kp[None, :]             # (S, T) causal+valid
+    sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    p = qprobs(cfg, p / jnp.sum(p, axis=-1, keepdims=True))
+    out = _attn_out(cfg, p, kv_qtensor(v8, v_scale)).reshape(b, s, h, dh)
+    return qact(cfg, "none", out)
+
+
 # --------------------------------------------------------------------------
 # int8 KV cache
 # --------------------------------------------------------------------------
@@ -432,6 +471,14 @@ def page_scatter_token(pages: Array, table: Array, pos: Array,
     blk, off = pos // page, pos % page
     pid = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
     return pages.at[pid, off].set(tok)
+
+
+def page_write(pages: Array, pid: Array, block: Array) -> Array:
+    """Whole-page KV write: pages (P, page, KV, dh) <- block (page, KV, dh)
+    at physical page `pid`.  The chunked-prefill step processes exactly one
+    page-aligned block of positions at a time, so the write is a single
+    dense page store (pid 0 = trash page absorbs masked-out chunks)."""
+    return pages.at[pid].set(block)
 
 
 def kv_dequantize(x8: Array, step: Array) -> Array:

@@ -24,16 +24,30 @@ from . import layers as L
 Array = jax.Array
 
 
-def causal_conv1d(cfg, x, w, b):
-    """Depthwise causal conv over seq.  x: (B,S,C), w: (K,C), b: (C,)."""
+def causal_conv1d(cfg, x, w, b, init=None):
+    """Depthwise causal conv over seq.  x: (B,S,C), w: (K,C), b: (C,).
+
+    `init` is the K-1 inputs PRECEDING x (the carried conv window of a
+    chunked prefill); None means zero history (sequence start) — identical
+    math, different left padding.
+    """
     k = w.shape[0]
     wq = qt_carrier(qweight(cfg, w))   # conv runs on the fp32 grid carrier
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if init is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init, x], axis=1)
     y = lax.conv_general_dilated(
         xp, wq[:, None, :], window_strides=(1,), padding="VALID",
         dimension_numbers=("NWC", "WIO", "NWC"),
         feature_group_count=x.shape[-1])
     return y + b
+
+
+def conv_window_tail(xi, prev, kc):
+    """Next conv window: last kc inputs of (carried window ++ this chunk).
+    Handles chunks shorter than the window without a dynamic slice."""
+    return jnp.concatenate([prev, xi], axis=1)[:, -kc:]
 
 
 # ==========================================================================
@@ -104,7 +118,9 @@ def _sscan_chunked(a, b, c_coef, h0, chunk, unroll=False):
 
 
 def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
-    """x: (B,S,D).  mode 'train' (state ignored) or 'decode' (S==1)."""
+    """x: (B,S,D).  mode 'train' (state ignored), 'chunk' (train-style
+    parallel scan seeded from `state` — the chunked-prefill page step), or
+    'decode' (S==1, state carried per token)."""
     bsz, s, d = x.shape
     di, n = acfg.d_inner, acfg.ssm_state
     r = max(d // 16, 1)
@@ -115,6 +131,9 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
     new_state = None
     if mode == "train":
         xc = causal_conv1d(cfg, xi, p["conv_w"], p["conv_b"])
+    elif mode == "chunk":
+        xc = causal_conv1d(cfg, xi, p["conv_w"], p["conv_b"],
+                           init=state["conv"])
     else:
         conv_s = state["conv"]                       # (B, K-1, di)
         window = jnp.concatenate([conv_s, xi], axis=1)
@@ -132,19 +151,24 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
     cs = qbn_param(cfg, cs, cfg.k_bn)
     a_mat = -jnp.exp(p["A_log"])                     # (di, N)
 
-    if mode == "train":
+    if mode in ("train", "chunk"):
         sdt = jnp.bfloat16 if cfg.scan_dtype == "bf16" else jnp.float32
         a = jnp.exp(dt[..., None] * a_mat).astype(sdt)   # (B,S,di,N)
         b = ((dt * xc)[..., None] * bs[:, :, None, :]).astype(sdt)
-        h0 = jnp.zeros((bsz, di, n), sdt)
+        h0 = (state["h"].astype(sdt) if mode == "chunk"
+              else jnp.zeros((bsz, di, n), sdt))
         y, h_last = _sscan_chunked(a, b, cs.astype(sdt), h0,
                                    chunk=acfg.scan_chunk,
                                    unroll=acfg.unroll_scan_chunks)
         y = y.astype(jnp.float32)
         kc = acfg.d_conv - 1
-        conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
-                     if s < kc else xi[:, s - kc:])
-        new_state = {"conv": conv_tail, "h": h_last}
+        if mode == "chunk":     # fp32 state: carry dtype of the slot store
+            new_state = {"conv": conv_window_tail(xi, state["conv"], kc),
+                         "h": h_last.astype(jnp.float32)}
+        else:
+            conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
+                         if s < kc else xi[:, s - kc:])
+            new_state = {"conv": conv_tail, "h": h_last}
     else:
         hs = state["h"]                              # (B, di, N)
         a1 = jnp.exp(dt[:, 0, :, None] * a_mat)
@@ -224,9 +248,10 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
     new_state = None
     if chunk is None:
         chunk = acfg.scan_chunk
-    if mode == "train":
-        xc = qact(cfg, "silu", causal_conv1d(cfg, xi, p["conv_w"],
-                                             p["conv_b"]))
+    if mode in ("train", "chunk"):
+        xc = qact(cfg, "silu", causal_conv1d(
+            cfg, xi, p["conv_w"], p["conv_b"],
+            init=state["conv"] if mode == "chunk" else None))
         xh = qt_carrier(xc).reshape(bsz, s, hm, pdim)
         alog = dt * a_neg                              # (B,S,Hm) log decays
         chunk = min(chunk, s)
@@ -267,7 +292,8 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
                      + jnp.einsum("bsn,bshp->bhnp", bsb, wx))
             return s_new, y_in + y_x
 
-        s0 = jnp.zeros((bsz, hm, n, pdim), jnp.float32)
+        s0 = (state["h"] if mode == "chunk"
+              else jnp.zeros((bsz, hm, n, pdim), jnp.float32))
         s_last, ys = lax.scan(body, s0, (xhc, dtc, alc, bsc, csc),
                               unroll=(True if acfg.unroll_scan_chunks
                                       else 1))
@@ -275,9 +301,13 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
         y = y[:, :s]
         xh = xh[:, :s]
         kc = acfg.d_conv - 1
-        conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
-                     if s < kc else xi[:, s - kc:])
-        new_state = {"conv": conv_tail, "h": s_last}
+        if mode == "chunk":
+            new_state = {"conv": conv_window_tail(xi, state["conv"], kc),
+                         "h": s_last}
+        else:
+            conv_tail = (jnp.pad(xi, ((0, 0), (kc - s, 0), (0, 0)))
+                         if s < kc else xi[:, s - kc:])
+            new_state = {"conv": conv_tail, "h": s_last}
     else:
         conv_s = state["conv"]
         window = jnp.concatenate([conv_s, xi], axis=1)

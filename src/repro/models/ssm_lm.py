@@ -127,6 +127,24 @@ class SSMLM:
         return logits, {"conv": state["conv"], "h": state["h"],
                         "pos": slots["pos"]}, {}
 
+    def prefill_page(self, params, dense, pool_view, tokens, pos0):
+        """Chunked prefill: one page of one lane's prompt advances the
+        per-layer mamba states (no KV pages — pool_view unused).  tokens:
+        (page,) for a single lane; pos0 ignored (SSM state is positionless).
+        """
+        del pool_view, pos0
+        x = params["embed"][tokens][None]               # (1, page, d)
+
+        def body(h, xs):
+            lp, st_c, st_h = xs
+            h2, ns = S.mamba1_block(self.q, self.a, lp, h, "chunk",
+                                    {"conv": st_c, "h": st_h})
+            return h2, (ns["conv"], ns["h"])
+        x, (nc, nh) = L.lscan(self.a, body, x,
+                              (params["layers"], dense["conv"], dense["h"]))
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, {"conv": nc, "h": nh, "pos": dense["pos"]}, {}
+
     def batch_pspec(self):
         return {"tokens": P(self.dp, None), "labels": P(self.dp, None)}
 

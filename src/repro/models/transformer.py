@@ -153,6 +153,24 @@ class LMTransformer:
                 ks = L.kv_quantize(kh, 2.0 ** -7)
                 vs = L.kv_quantize(vh, 2.0 ** -7)
                 new_cache = (ks, vs)
+        elif mode == "chunk":
+            # chunked prefill: ONE lane (b==1), s == page_size tokens whose
+            # positions pos (S,) fill exactly one pool page.  The page is
+            # the quantization unit — every amax spans this page alone —
+            # so the written KV is a pure function of the token prefix
+            # (the radix cache's bitwise-hit contract, DESIGN.md §10).
+            qh = L.rope(qh, pos, a.rope_theta)
+            kh = L.rope(kh, pos, a.rope_theta)
+            qh, kh, vh = (qact(q, "none", t) for t in (qh, kh, vh))
+            ks, vs = cache["k_scale"], cache["v_scale"]
+            kp, vp = cache["k_pages"], cache["v_pages"]
+            table = cache["table"]
+            pid = table[0, pos[0] // kp.shape[1]]
+            kp = L.page_write(kp, pid, L.kv_quantize(kh[0], ks))
+            vp = L.page_write(vp, pid, L.kv_quantize(vh[0], vs))
+            o = L.paged_prefill_attention(q, qh, kp, vp, table, ks, vs,
+                                          q_pos=pos)
+            new_cache = (kp, vp)
         else:  # decode: s == 1, pos: (B,), cache: dict slices for this layer
             pvec = pos  # (B,)
             qh = _rope_batched(qh, pvec, a.rope_theta)
@@ -216,7 +234,7 @@ class LMTransformer:
             x, caches = L.lscan(self.a, body, x, params["layers"])
             return x, caches
 
-        if "k_pages" in cache:   # paged decode: per-layer page pools
+        if "k_pages" in cache:   # paged decode/chunk: per-layer page pools
             def body(h, xs):
                 lp, kp, vp = xs
                 layer_cache = {"k_pages": kp, "v_pages": vp,
@@ -228,8 +246,10 @@ class LMTransformer:
             x, (nk, nv) = L.lscan(self.a, body, x,
                                   (params["layers"], cache["k_pages"],
                                    cache["v_pages"]))
-            return x, dict(cache, k_pages=nk, v_pages=nv,
-                           pos=cache["pos"] + 1)
+            out = dict(cache, k_pages=nk, v_pages=nv)
+            if mode == "decode":
+                out["pos"] = cache["pos"] + 1
+            return x, out
 
         def body(h, xs):
             lp, ck, cv = xs
@@ -324,6 +344,25 @@ class LMTransformer:
         x, nc = self._backbone(params, x, slots["pos"], "decode", cache)
         logits = self._logits(params, x)[:, 0]
         return logits, slots, {"k_pages": nc["k_pages"],
+                               "v_pages": nc["v_pages"]}
+
+    def prefill_page(self, params, dense, pool_view, tokens, pos0):
+        """Chunked prefill: run ONE page of one lane's prompt.
+
+        tokens: (page,) int32; pos0: the page's first absolute position
+        (a multiple of page_size); pool_view as in `paged_decode_step`
+        with a single-lane (1, NB) table.  Writes the page's KV into the
+        pool and attends to every earlier position through the table.
+        Returns (last-token logits (1, Vp), dense slot values, new pool
+        payloads).  No recurrent state here, so `dense` passes through.
+        """
+        page = pool_view["k_pages"].shape[2]
+        x = params["embed"][tokens][None]               # (1, page, d)
+        pos = pos0 + jnp.arange(page)
+        cache = dict(pool_view)
+        x, nc = self._backbone(params, x, pos, "chunk", cache)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, dense, {"k_pages": nc["k_pages"],
                                "v_pages": nc["v_pages"]}
 
     # ---------------- dry-run plumbing ----------------

@@ -1,23 +1,29 @@
 """Continuous-batching int8 serving engine over a paged QTensor KV pool.
 
-Layout (DESIGN.md §7):
-  pool.py      — PagePool: int8 QTensor pages + free-list allocator + the
-                 int8-vs-fp32 byte accounting
+Layout (DESIGN.md §7, §10):
+  pool.py      — PagePool: refcounted int8 QTensor pages + free-list
+                 allocator + the int8-vs-fp32 byte accounting
+  radix.py     — RadixCache: prefix-sharing radix tree over the pool
+                 (page-granular lookup/insert, LRU eviction, defrag remap)
   scheduler.py — request lifecycle (QUEUED->PREFILL->DECODE->DONE),
-                 admission control, recompute preemption
-  engine.py    — Engine: fused jit decode over padded lanes, sampling,
-                 per-request metrics, StepWatchdog wiring
-  api.py       — make_engine + poisson_traffic/run_load/naive_serve
+                 bounded-skip admission, recompute preemption
+  engine.py    — Engine: fused jit decode over padded lanes, monolithic or
+                 chunked prefill, sampling, per-request metrics,
+                 StepWatchdog wiring
+  api.py       — make_engine + poisson_traffic/shared_prefix_traffic/
+                 run_load/naive_serve
 """
 from .engine import (Engine, fused_decode_active, greedy_token,
                      make_sampler)
 from .pool import PagePool
+from .radix import RadixCache
 from .scheduler import Request, RequestState, Scheduler
-from .api import make_engine, naive_serve, poisson_traffic, run_load
+from .api import (make_engine, naive_serve, poisson_traffic, run_load,
+                  shared_prefix_traffic)
 
 __all__ = [
     "Engine", "fused_decode_active", "greedy_token", "make_sampler",
-    "PagePool", "Request",
+    "PagePool", "RadixCache", "Request",
     "RequestState", "Scheduler", "make_engine", "naive_serve",
-    "poisson_traffic", "run_load",
+    "poisson_traffic", "run_load", "shared_prefix_traffic",
 ]

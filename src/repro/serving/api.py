@@ -9,7 +9,10 @@
 
 `poisson_traffic` is an open-loop generator: exponential inter-arrival
 gaps at `rate` req/s with mixed prompt/generation lengths — the staggered
-pattern that makes continuous batching pay.  `run_load` replays it against
+pattern that makes continuous batching pay.  `shared_prefix_traffic`
+biases a fraction of prompts onto common page-aligned prefixes (the
+system-prompt pattern the radix cache exploits).  `run_load` replays
+traffic against
 the engine's clock without closing the loop on completions, and
 `naive_serve` is the sequential one-request-at-a-time baseline the ISSUE's
 acceptance criterion compares against.
@@ -63,6 +66,37 @@ def poisson_traffic(rate: float, n_requests: int,
         out.append({
             "arrival": float(arrivals[i]),
             "prompt": rng.integers(0, vocab, size=s).astype(np.int32),
+            "max_new": int(rng.choice(gen_lens)),
+        })
+    return out
+
+
+def shared_prefix_traffic(rate: float, n_requests: int, sharing: float = 0.5,
+                          prefix_len: int = 16, n_prefixes: int = 2,
+                          tail_lens=(4, 8), gen_lens=(4, 8),
+                          vocab: int = 128, seed: int = 0) -> list[dict]:
+    """Poisson arrivals where a `sharing` fraction of prompts open with one
+    of `n_prefixes` common prefixes of `prefix_len` tokens (the system-
+    prompt / few-shot-template pattern the radix cache exploits); the rest
+    draw a fresh random prefix of the same length.  Keep `prefix_len` a
+    multiple of the engine's page_size so the shared prefix is publishable
+    page-for-page.  Same row format as `poisson_traffic`.
+    """
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+                for _ in range(n_prefixes)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    out = []
+    for i in range(n_requests):
+        tail = rng.integers(0, vocab,
+                            size=int(rng.choice(tail_lens))).astype(np.int32)
+        if rng.random() < sharing:
+            head = prefixes[int(rng.integers(n_prefixes))]
+        else:
+            head = rng.integers(0, vocab, size=prefix_len).astype(np.int32)
+        out.append({
+            "arrival": float(arrivals[i]),
+            "prompt": np.concatenate([head, tail]),
             "max_new": int(rng.choice(gen_lens)),
         })
     return out

@@ -13,12 +13,28 @@ gather -> decode attention on int8 payloads -> token write-back into pages
 trash page and their positions never advance).
 
 Per-step flow (Engine.step):
-  1. admit + prefill new requests into free lanes (inflight batching: they
-     join this very step's decode batch)
-  2. allocate decode pages at page boundaries; preempt the longest-context
+  1. admit new requests into free lanes (inflight batching: monolithic
+     prefills join this very step's decode batch; chunked admissions start
+     streaming prefill work)
+  2. chunked mode only: run up to `prefill_budget` prompt tokens of
+     prefill work — page-sized chunks through ONE jit-stable trace plus a
+     ragged tail token-by-token — interleaved with decode so a long prompt
+     never blocks running lanes for more than one budget's worth of work
+  3. allocate decode pages at page boundaries; preempt the longest-context
      request when the pool is exhausted (recompute preemption)
-  3. one fused decode step over all lanes; append sampled tokens
-  4. retire finished requests, free their pages
+  4. one fused decode step over all DECODE lanes (mid-prefill lanes ride
+     along masked: their table rows zero to the trash page); append
+     sampled tokens
+  5. retire finished requests, unref their pages
+
+Prefix sharing (DESIGN.md §10): with `radix_cache=True` the chunked
+engine fronts the pool with a `RadixCache` — admission looks up the
+longest page-aligned cached prefix (refs those pages instead of
+recomputing them), finished prefills publish their full prompt pages, and
+allocation pressure evicts LRU tree-only subtrees before preempting live
+requests.  Chunked prefill makes the hits exact: the page is the
+quantization unit, so a page's int8 payload is a bitwise-deterministic
+function of its token prefix.
 
 The decode loop performs exactly ONE jitted device computation per step
 (asserted by tests/test_serving.py): the sampling key derives inside the
@@ -41,6 +57,7 @@ import numpy as np
 from repro.runtime.fault import StepWatchdog
 
 from .pool import PagePool
+from .radix import RadixCache
 from .scheduler import Request, RequestState, Scheduler
 
 
@@ -80,18 +97,36 @@ class Engine:
         1 + max_lanes * ceil(max_ctx / page_size) — every lane can hold a
         full-context request); max_ctx: per-request prompt + generation cap.
       temperature/top_k: sampling policy (0.0 = greedy); seed: PRNG seed.
+      prefill_mode: "monolithic" (default — whole prompt in one prefill
+        call at admission) or "chunked" (page-sized chunks streamed
+        through one jit-stable trace, interleaved with decode).
+      prefill_chunk: pages per chunked-prefill trace invocation;
+      prefill_budget: prompt tokens of prefill work per engine step
+        (default prefill_chunk * page_size — one chunk's worth).
+      radix_cache: front the pool with a prefix-sharing RadixCache
+        (requires prefill_mode="chunked", where pages are bitwise-
+        deterministic in their token prefix, and a paged family).
+      max_skip / starvation_limit: bounded-skip admission policy knobs
+        (see Scheduler).
       watchdog: StepWatchdog timing each fused step; clock: time source.
 
-    Raises ValueError if the model family is not servable or the pool
-    cannot hold one max-context request (the progress guarantee).
+    Raises ValueError if the model family is not servable, the pool
+    cannot hold one max-context request (the progress guarantee), or
+    radix_cache is requested without chunked prefill / a paged pool.
     """
 
     def __init__(self, model, params, *, max_lanes: int = 4,
                  page_size: int = 8, n_pages: int | None = None,
                  max_ctx: int = 64, temperature: float = 0.0,
                  top_k: int = 0, seed: int = 0,
+                 prefill_mode: str = "monolithic", prefill_chunk: int = 4,
+                 prefill_budget: int | None = None,
+                 radix_cache: bool = False, max_skip: int = 4,
+                 starvation_limit: int = 8,
                  watchdog: StepWatchdog | None = None, clock=time.monotonic):
-        from repro.launch.train import make_paged_decode_step
+        from repro.launch.train import (make_chunked_prefill_step,
+                                        make_paged_decode_step,
+                                        make_prefill_token_step)
 
         self.model, self.params = model, params
         self.clock = clock
@@ -115,7 +150,8 @@ class Engine:
                 raise ValueError(
                     f"pool of {n_pages} pages cannot hold one max_ctx="
                     f"{max_ctx} request ({self.n_blocks} pages needed)")
-        self.scheduler = Scheduler(self.pool)
+        self.scheduler = Scheduler(self.pool, max_skip=max_skip,
+                                   starvation_limit=starvation_limit)
         self.watchdog = watchdog or StepWatchdog()
 
         self.max_lanes = max_lanes
@@ -145,6 +181,41 @@ class Engine:
         else:
             prefill = lambda p, t, n: model.prefill(p, t)     # noqa: E731
         self._prefill_jit = jax.jit(prefill, static_argnums=(2,))
+
+        # ---- chunked prefill + radix prefix cache (DESIGN.md §10) --------
+        if prefill_mode not in ("monolithic", "chunked"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        self.prefill_mode = prefill_mode
+        self.chunked = prefill_mode == "chunked"
+        self.radix = None
+        self._pf_dense: dict[int, object] = {}  # rid -> mid-prefill state
+        if self.chunked:
+            self.prefill_chunk = prefill_chunk
+            self.prefill_budget = (prefill_budget
+                                   or prefill_chunk * page_size)
+            self._chunk_jit = jax.jit(
+                make_chunked_prefill_step(model, prefill_chunk, *scales),
+                donate_argnums=(2, 3))
+            self._tail_jit = jax.jit(
+                make_prefill_token_step(model, *scales),
+                donate_argnums=(2, 3))
+            self._dense0 = model.init_slots(1)  # zero pf-state template
+            self._warmup()
+        if radix_cache:
+            if not self.chunked:
+                raise ValueError(
+                    "radix_cache requires prefill_mode='chunked' (only the "
+                    "page-scoped quantization of chunked prefill makes "
+                    "cached pages bitwise-exact in their token prefix)")
+            if not self.paged:
+                raise ValueError(
+                    f"radix_cache needs a paged KV family "
+                    f"(got {model.a.family!r})")
+            self.radix = RadixCache(
+                self.pool,
+                quant_key=f"{model.a.family}/page{page_size}/{model.q}",
+                store_dense=len(self._dense_axes) > 1)
+            self.scheduler.cache = self.radix
 
         # metrics
         self.engine_steps = 0
@@ -192,15 +263,22 @@ class Engine:
         finished = []
         free = [ln for ln, r in enumerate(self.lane_req) if r is None]
         for req in self.scheduler.admit(len(free)):
-            self._admit(req, free.pop(0))
-            if req.done:                 # max_new == 1: prefill completed it
-                self._release(req)
-                finished.append(req)
+            if self.chunked:
+                self._admit_chunked(req, free.pop(0))
+            else:
+                self._admit(req, free.pop(0))
+                if req.done:             # max_new == 1: prefill completed it
+                    self._release(req)
+                    finished.append(req)
+
+        if self.chunked:
+            finished.extend(self._run_prefill_chunks())
 
         if self.paged:
             self._ensure_pages()
 
-        live = [ln for ln, r in enumerate(self.lane_req) if r is not None]
+        live = [ln for ln, r in enumerate(self.lane_req)
+                if r is not None and r.state is RequestState.DECODE]
         if live:
             t0 = time.monotonic()
             toks = self._decode()
@@ -245,6 +323,8 @@ class Engine:
     # ---- admission / release / preemption --------------------------------
 
     def _admit(self, req: Request, lane: int) -> None:
+        if req.queue_s is None:         # TTFT split: time spent QUEUED
+            req.queue_s = self.clock() - req.arrival
         s = len(req.prompt)
         nb = 0
         if self.paged:
@@ -273,6 +353,7 @@ class Engine:
         req.generated.append(tok0)
         if req.ttft is None:
             req.ttft = self.clock() - req.arrival
+            req.prefill_s = req.ttft - req.queue_s
         req.lane = lane
         req.state = RequestState.DECODE
         self.lane_req[lane] = req
@@ -280,7 +361,9 @@ class Engine:
 
     def _release(self, req: Request) -> None:
         if self.paged and req.page_ids:
-            self.pool.free(req.page_ids)
+            for pid in req.page_ids:    # shared pages just drop our hold
+                self.pool.unref(pid)
+        self._pf_dense.pop(req.rid, None)
         if req.lane >= 0:
             self.table[req.lane] = 0
             self.lane_req[req.lane] = None
@@ -292,35 +375,213 @@ class Engine:
         self._release(req)
         self.scheduler.preempt(req)
 
+    def _alloc_pages(self, n: int, req: Request) -> list[int] | None:
+        """Allocate under pressure: radix LRU eviction first, recompute
+        preemption second.  Returns None iff `req` itself got preempted."""
+        pid = self.pool.alloc(n, owner=req.rid)
+        while pid is None and self.radix is not None \
+                and self.radix.evictable() > 0:
+            self.radix.evict(n - self.pool.free_count)
+            pid = self.pool.alloc(n, owner=req.rid)
+        while pid is None:
+            live = [r for r in self.lane_req if r is not None]
+            if not live:
+                raise RuntimeError(
+                    f"pool exhausted with no live lanes to preempt "
+                    f"(need {n} pages, free {self.pool.free_count})")
+            victim = self.scheduler.pick_victim(live)
+            self._preempt(victim)
+            if victim is req:
+                return None
+            pid = self.pool.alloc(n, owner=req.rid)
+        return pid
+
     def _ensure_pages(self) -> None:
-        """Grow page tables at block boundaries; preempt on exhaustion."""
+        """Grow DECODE lanes' page tables at block boundaries (mid-prefill
+        lanes preallocated everything at admission); evict radix subtrees,
+        then preempt, on exhaustion."""
         for lane in range(self.max_lanes):
             req = self.lane_req[lane]
-            if req is None:
+            if req is None or req.state is not RequestState.DECODE:
                 continue
             blk = req.pos // self.page_size
             if blk < len(req.page_ids):
                 continue
-            pid = self.pool.alloc(1, owner=req.rid)
-            while pid is None:
-                live = [r for r in self.lane_req if r is not None]
-                victim = self.scheduler.pick_victim(live)
-                self._preempt(victim)
-                if victim is req:
-                    break
-                pid = self.pool.alloc(1, owner=req.rid)
+            pid = self._alloc_pages(1, req)
             if pid is None:          # this lane itself was preempted
                 continue
             self.table[lane, blk] = pid[0]
             self._table_dev = None
             req.page_ids.extend(pid)
 
+    # ---- chunked prefill + radix prefix cache (DESIGN.md §10) ------------
+
+    def _warmup(self) -> None:
+        """Compile the chunked engine's traces ahead of the first request.
+
+        Unlike monolithic prefill (whose jit is keyed on every distinct
+        prompt length), the chunked engine runs FOUR shape-stable traces —
+        chunk prefill, tail token, fused decode, sampling — so all of its
+        compilation can happen at construction instead of inside the first
+        requests' TTFT.  The warmup calls write only to the trash page
+        (all-zero tables, n_pages=0 masks every chunk page) and the decode
+        slots re-initialize after, so no observable state survives."""
+        zrow = jnp.zeros((1, self.n_blocks), jnp.int32)
+        toks = jnp.zeros((self.prefill_chunk * self.page_size,), jnp.int32)
+        _, kp, vp, lg, _ = self._chunk_jit(
+            self.params, self._dense0, *self._pages_for_jit(), zrow,
+            toks, np.int32(0), np.int32(0))
+        self._store_pages(kp, vp)
+        _, kp, vp, _ = self._tail_jit(
+            self.params, self._dense0, *self._pages_for_jit(), zrow,
+            jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32))
+        self._store_pages(kp, vp)
+        # the ctr=0 key is never used live (the counter pre-increments)
+        self._sample_jit(lg, np.int32(0))
+        slots = dict(self.slots, pos=jnp.zeros((self.max_lanes,), jnp.int32))
+        _, kp, vp, _ = self._decode_jit(
+            self.params, slots, *self._pages_for_jit(),
+            jnp.asarray(self.table), jnp.asarray(self.h_tokens),
+            np.int32(0))
+        self._store_pages(kp, vp)
+        self.slots = self.model.init_slots(self.max_lanes)
+
+    def _admit_chunked(self, req: Request, lane: int) -> None:
+        """Claim a lane and pages; prefill streams in later engine steps.
+
+        Radix lookup first: the longest cached page-aligned prefix is
+        reused by reference (one pool ref per hit page), only the suffix
+        pages are allocated, and for recurrent families the deepest node's
+        dense snapshot seeds the mid-prefill state."""
+        if req.queue_s is None:
+            req.queue_s = self.clock() - req.arrival
+        s = len(req.prompt)
+        hit_pids, hit_dense = [], None
+        if self.radix is not None:
+            hit_pids, hit_dense = self.radix.lookup(req.prompt)
+            for pid in hit_pids:
+                self.pool.ref(pid)      # the request's hold on the hit
+        req.n_shared = len(hit_pids)
+        req.pf_pos = req.n_shared * self.page_size
+        req.page_snaps = [None] * (s // self.page_size)
+        if self.paged:
+            nb_total = s // self.page_size + 1   # prompt + 1 decode block
+            new_pids = self._alloc_pages(nb_total - req.n_shared, req)
+            assert new_pids is not None  # not in lane_req yet: no self-kill
+            req.page_ids = list(hit_pids) + new_pids
+            self.table[lane] = 0
+            self.table[lane, :nb_total] = req.page_ids
+            self._table_dev = None
+        self._pf_dense[req.rid] = (hit_dense if hit_dense is not None
+                                   else self._dense0)
+        req.lane = lane
+        self.lane_req[lane] = req       # PREFILL state: masked in decode
+
+    def _run_prefill_chunks(self) -> list[Request]:
+        """Advance every mid-prefill lane by up to `prefill_budget` prompt
+        tokens: full pages through the chunked trace (page-scoped
+        quantization — the radix determinism unit), then the ragged tail
+        token-by-token through the decode body.  Completing lanes sample
+        their first token and publish their pages to the radix tree."""
+        finished: list[Request] = []
+        budget = self.prefill_budget
+        page = self.page_size
+        for lane in range(self.max_lanes):
+            if budget <= 0:
+                break
+            req = self.lane_req[lane]
+            if req is None or req.state is not RequestState.PREFILL:
+                continue
+            s = len(req.prompt)
+            nb_full = s // page
+            lg = None
+            while budget >= page and req.pf_pos < nb_full * page:
+                start = req.pf_pos // page
+                allowed = min(self.prefill_chunk, nb_full - start,
+                              budget // page)
+                toks = np.zeros((self.prefill_chunk * page,), np.int32)
+                chunk = req.prompt[start * page:(start + allowed) * page]
+                toks[:len(chunk)] = chunk
+                dn, kp, vp, lg, snaps = self._chunk_jit(
+                    self.params, self._pf_dense[req.rid],
+                    *self._pages_for_jit(), self._lane_table(lane),
+                    jnp.asarray(toks), np.int32(start),
+                    np.int32(start + allowed))
+                self._store_pages(kp, vp)
+                self._pf_dense[req.rid] = dn
+                if self.radix is not None and self.radix.store_dense:
+                    for j in range(allowed):
+                        req.page_snaps[start + j] = jax.tree.map(
+                            lambda a, j=j: a[j], snaps)
+                req.pf_pos = (start + allowed) * page
+                budget -= allowed * page
+            while budget >= 1 and nb_full * page <= req.pf_pos < s:
+                dn, kp, vp, lg = self._tail_jit(
+                    self.params, self._pf_dense[req.rid],
+                    *self._pages_for_jit(), self._lane_table(lane),
+                    jnp.asarray(req.prompt[req.pf_pos:req.pf_pos + 1]),
+                    jnp.full((1,), req.pf_pos, jnp.int32))
+                self._store_pages(kp, vp)
+                self._pf_dense[req.rid] = dn
+                req.pf_pos += 1
+                budget -= 1
+            if req.pf_pos >= s:         # lg is this lane's final logits
+                self._finish_prefill(req, lane, lg)
+                if req.done:             # max_new == 1
+                    self._release(req)
+                    finished.append(req)
+        return finished
+
+    def _finish_prefill(self, req: Request, lane: int, logits) -> None:
+        """Prefill done: sample the first token, move the mid-prefill dense
+        state into the lane's decode slot, flip to DECODE, and publish the
+        full prompt pages to the radix tree (deduping against concurrent
+        identical prefills that published first)."""
+        tok0 = int(self._sample_jit(logits, self._next_ctr())[0])
+        req.generated.append(tok0)
+        if req.ttft is None:
+            req.ttft = self.clock() - req.arrival
+            req.prefill_s = req.ttft - req.queue_s
+        dense = self._pf_dense.pop(req.rid)
+        self.slots = _write_dense(self.slots, self._dense_axes,
+                                  jnp.int32(lane),
+                                  _squeeze_dense(dense, self._dense_axes))
+        req.state = RequestState.DECODE
+        self.h_tokens[lane] = tok0
+        self._table_dev = None          # lane unmasks in the decode table
+        if self.radix is not None:
+            nb_full = len(req.prompt) // self.page_size
+            if nb_full:
+                dedup = self.radix.insert(req.prompt,
+                                          req.page_ids[:nb_full],
+                                          req.page_snaps)
+                for blk, cached in dedup.items():
+                    self.pool.ref(cached)           # byte-identical page:
+                    self.pool.unref(req.page_ids[blk])  # swap to cached
+                    req.page_ids[blk] = cached
+                    self.table[lane, blk] = cached
+        req.page_snaps = []
+
+    def _lane_table(self, lane: int):
+        """One lane's page-table row as the (1, NB) view the B=1 prefill
+        traces expect."""
+        return jnp.asarray(self.table[lane:lane + 1])
+
+    def _pages_for_jit(self):
+        if self.paged:
+            return self.pool.k, self.pool.v
+        return jnp.zeros((0,), jnp.int8), jnp.zeros((0,), jnp.int8)
+
+    def _store_pages(self, kp, vp) -> None:
+        if self.paged:
+            self.pool.k, self.pool.v = kp, vp
+
     # ---- fused decode ----------------------------------------------------
 
     def _decode(self) -> np.ndarray:
         pos = np.zeros((self.max_lanes,), np.int32)
         for ln, req in enumerate(self.lane_req):
-            if req is not None:
+            if req is not None and req.state is RequestState.DECODE:
                 pos[ln] = req.pos
         slots = dict(self.slots, pos=jnp.asarray(pos))
         if self.paged:
@@ -329,7 +590,16 @@ class Engine:
             kp = jnp.zeros((0,), jnp.int8)
             vp = jnp.zeros((0,), jnp.int8)
         if self._table_dev is None:     # re-upload only when tables changed
-            self._table_dev = jnp.asarray(self.table)
+            # mid-prefill lanes decode masked: their rows point at the
+            # trash page so the ride-along writes never touch real pages
+            mask = np.array([r is not None
+                             and r.state is not RequestState.DECODE
+                             for r in self.lane_req])
+            eff = self.table
+            if mask.any():
+                eff = self.table.copy()
+                eff[mask] = 0
+            self._table_dev = jnp.asarray(eff)
         new_slots, new_k, new_v, toks = self._decode_jit(
             self.params, slots, kp, vp, self._table_dev,
             jnp.asarray(self.h_tokens), self._next_ctr())
@@ -361,6 +631,8 @@ class Engine:
             for req in self.lane_req:
                 if req is not None:
                     req.page_ids = [int(trans[p]) for p in req.page_ids]
+            if self.radix is not None:  # shared pages moved exactly once
+                self.radix.remap(mapping)
         return len(mapping)
 
     def decode_jaxpr(self):
@@ -389,12 +661,17 @@ class Engine:
 
         Returns a dict with: engine_steps, decode_steps, decode_wall_s,
         completed, generated_tokens, queue_depth, live_lanes, preemptions,
-        straggler_steps, ttft_mean_s / ttft_max_s (over DONE requests),
-        decode_tok_s, and "pool" (the PagePool.report() dict) when paged.
+        skips (bounded-skip queue jumps), straggler_steps, ttft_mean_s /
+        ttft_max_s and the TTFT split queue_ms_mean / prefill_ms_mean
+        (over DONE requests), decode_tok_s, "pool" (the PagePool.report()
+        dict) when paged, and "radix" (RadixCache.stats()) +
+        prefix_hit_rate when the radix cache is on.
         """
         done = [r for r in self.scheduler.requests.values()
                 if r.state is RequestState.DONE]
         ttfts = [r.ttft for r in done if r.ttft is not None]
+        queues = [r.queue_s for r in done if r.queue_s is not None]
+        prefills = [r.prefill_s for r in done if r.prefill_s is not None]
         gen = sum(len(r.generated) for r in done)
         out = {
             "engine_steps": self.engine_steps,
@@ -405,14 +682,21 @@ class Engine:
             "queue_depth": self.scheduler.queue_depth,
             "live_lanes": sum(r is not None for r in self.lane_req),
             "preemptions": self.scheduler.preemptions,
+            "skips": self.scheduler.skips,
             "straggler_steps": self.straggler_steps,
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+            "queue_ms_mean": 1e3 * float(np.mean(queues)) if queues else 0.0,
+            "prefill_ms_mean": (1e3 * float(np.mean(prefills))
+                                if prefills else 0.0),
             "decode_tok_s": (gen / self.decode_wall_s
                              if self.decode_wall_s > 0 else 0.0),
         }
         if self.pool is not None:
             out["pool"] = self.pool.report(ctx_len=self.max_ctx)
+        if self.radix is not None:
+            out["radix"] = self.radix.stats()
+            out["prefix_hit_rate"] = self.radix.hit_rate
         return out
 
 
@@ -425,6 +709,13 @@ def _write_dense(slots, axes, lane, vals):
         else:
             out[name] = slots[name].at[:, lane].set(vals[name])
     return out
+
+
+def _squeeze_dense(dense, axes):
+    """Drop the size-1 lane dim of a B=1 prefill-state tree so the values
+    land in a lane slot via `_write_dense` (which indexes, not slices)."""
+    return {name: (dense[name][0] if ax == 0 else dense[name][:, 0])
+            for name, ax in axes.items()}
 
 
 @partial(jax.jit, donate_argnums=(0,))

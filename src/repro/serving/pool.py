@@ -11,6 +11,14 @@ Page id 0 is the trash page: dead lanes' page tables point at it, their
 decode writes collide there harmlessly, and the attention mask never reads
 it.  The allocator therefore hands out ids 1..P-1.
 
+Pages are REFCOUNTED so the radix prefix cache (radix.py) can share one
+physical page between the tree and any number of live requests:
+`alloc` hands a page out with refcount 1, `ref`/`unref` adjust it, and the
+page returns to the free list only when the count hits zero.  The strict
+`free` entry point refuses shared pages (refcount > 1) — a shared page can
+only die by every holder unreffing it, which is what makes double-free and
+use-after-free structurally impossible for cache hits (DESIGN.md §10).
+
 Accounting proves the int8 story: `report()` compares the resident int8
 footprint against the fp32 cache the same geometry would need — the ~4x
 byte ratio is exactly ~4x more resident sequences at a fixed HBM budget.
@@ -39,6 +47,7 @@ class PagePool:
         # free list (LIFO for reuse locality); id 0 reserved as trash
         self._free = list(range(n_pages - 1, 0, -1))
         self._owner: dict[int, object] = {}
+        self._refs: dict[int, int] = {}      # live page -> refcount (>= 1)
         # accounting
         self.allocs = 0
         self.frees = 0
@@ -64,21 +73,56 @@ class PagePool:
         return -(-n_tokens // self.page_size)
 
     def alloc(self, n: int, owner=None) -> list[int] | None:
-        """Pop n pages off the free list, or None (no partial allocation)."""
+        """Pop n pages off the free list, or None (no partial allocation).
+        Each page comes out with refcount 1 (the allocating owner)."""
         if n > self.free_count:
             self.failed_allocs += 1
             return None
         ids = [self._free.pop() for _ in range(n)]
         for pid in ids:
             self._owner[pid] = owner
+            self._refs[pid] = 1
         self.allocs += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return ids
 
+    # ---- refcounts (shared prefix pages, DESIGN.md §10) ------------------
+
+    def refcount(self, pid: int) -> int:
+        """Total holders of a live page (0 for free pages / the trash)."""
+        return self._refs.get(pid, 0)
+
+    def ref(self, pid: int) -> None:
+        """Add a holder to an allocated page (radix hit / tree publish)."""
+        if pid not in self._refs:
+            raise ValueError(f"ref of unallocated page {pid}")
+        self._refs[pid] += 1
+
+    def unref(self, pid: int) -> bool:
+        """Drop one holder; the page frees when the count reaches zero.
+        Returns True iff this call returned the page to the free list."""
+        if pid not in self._refs:
+            raise ValueError(f"unref of unallocated page {pid}")
+        self._refs[pid] -= 1
+        if self._refs[pid] > 0:
+            return False
+        del self._refs[pid]
+        self._owner.pop(pid, None)
+        self._free.append(pid)
+        self.frees += 1
+        return True
+
     def free(self, ids) -> None:
+        """Strict release: every page must be exclusively held (refcount 1).
+        Shared pages must be `unref`ed by each holder instead."""
         for pid in ids:
             if pid == 0 or pid in self._free:
                 raise ValueError(f"double free / trash free of page {pid}")
+            if self._refs.get(pid, 1) > 1:
+                raise ValueError(
+                    f"free of shared page {pid} "
+                    f"({self._refs[pid] - 1} outstanding refs); use unref")
+            self._refs.pop(pid, None)
             self._owner.pop(pid, None)
             self._free.append(pid)
         self.frees += len(ids)
@@ -89,10 +133,14 @@ class PagePool:
         """Compact live pages to the lowest physical ids.
 
         Payloads move (one gather per arena), owners keep their pages under
-        new ids.  Returns the old->new id mapping so callers rewrite their
-        page tables; identity entries are omitted.
+        new ids.  A SHARED page (refcount > 1) moves exactly once — the
+        mapping carries one entry per physical page no matter how many
+        holders reference it, and every holder (lane tables, request
+        page-id lists, radix tree nodes) rewrites against that one entry.
+        Returns the old->new id mapping so callers rewrite their page
+        tables; identity entries are omitted.
         """
-        live = sorted(self._owner)
+        live = sorted(self._refs)
         mapping = {old: new for new, old in enumerate(live, start=1)
                    if old != new}
         if mapping:
@@ -104,6 +152,8 @@ class PagePool:
             self.v = jnp.take(self.v, src, axis=1)
             self._owner = {mapping.get(p, p): o
                            for p, o in self._owner.items()}
+            self._refs = {mapping.get(p, p): c
+                          for p, c in self._refs.items()}
             self._free = list(range(self.n_pages - 1, len(live), -1))
             self.defrag_moves += len(mapping)
         return mapping
@@ -124,6 +174,7 @@ class PagePool:
         rep = {
             "n_pages": self.n_pages, "page_size": self.page_size,
             "in_use": self.in_use, "free": self.free_count,
+            "shared_pages": sum(c > 1 for c in self._refs.values()),
             "peak_in_use": self.peak_in_use,
             "allocs": self.allocs, "frees": self.frees,
             "failed_allocs": self.failed_allocs,

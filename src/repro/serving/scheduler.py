@@ -11,9 +11,16 @@ Pure control plane: no jax here.  The scheduler decides *which* requests
 run; the engine owns the device arrays and executes the decisions.
 
 Policies:
-  * admission — FIFO; a request is admitted when a lane is free and the
-    pool can cover its prompt pages plus the first decode page.  Head-of-
-    line blocking is deliberate (no starvation of long prompts).
+  * admission — FIFO with BOUNDED SKIP: a request is admitted when a lane
+    is free and the pool (free pages + radix-evictable pages, minus the
+    prefix pages a cache hit would cover) can fund its prompt pages plus
+    the first decode page.  Up to `max_skip` queued requests that don't
+    fit may be jumped by smaller ones behind them — killing the
+    head-of-line blocking a single huge prompt used to impose — but every
+    jump increments the skipped request's counter, and once a request has
+    been skipped `starvation_limit` times nothing passes it until it
+    admits (the progress guarantee: pool >= one max-ctx request, so the
+    head always eventually fits).
   * inflight batching — admissions happen every step, so fresh prefills
     join the running decode batch immediately.
   * preemption — on pool exhaustion the longest-context live request is
@@ -49,10 +56,17 @@ class Request:
     lane: int = -1
     page_ids: list = field(default_factory=list)
     ttft: float | None = None       # first-token latency (first admission)
+    queue_s: float | None = None    # TTFT split: submit -> first admission
+    prefill_s: float | None = None  # TTFT split: admission -> first token
     finish: float | None = None
     preemptions: int = 0
+    skipped: int = 0                # admissions that jumped this request
     n_folded: int = 0               # generated tokens recompute folded into
                                     # the prompt (don't double count)
+    # chunked-prefill progress (engine-owned, reset on preemption)
+    pf_pos: int = 0                 # prompt tokens already prefilled
+    n_shared: int = 0               # prefix pages served by the radix cache
+    page_snaps: list = field(default_factory=list)  # per-page dense snaps
 
     @property
     def ctx_len(self) -> int:
@@ -73,13 +87,18 @@ class Request:
 class Scheduler:
     """Queue + lifecycle bookkeeping; policies as documented above."""
 
-    def __init__(self, pool=None):
+    def __init__(self, pool=None, max_skip: int = 4,
+                 starvation_limit: int = 8):
         self.pool = pool
+        self.cache = None               # RadixCache (engine wires it up)
+        self.max_skip = max_skip
+        self.starvation_limit = starvation_limit
         self.queue: deque[Request] = deque()
         self.requests: dict[int, Request] = {}
         self._ids = itertools.count()
         self.admitted = 0
         self.preemptions = 0
+        self.skips = 0                  # total queue jumps
 
     def submit(self, prompt: np.ndarray, max_new: int,
                arrival: float) -> Request:
@@ -94,32 +113,62 @@ class Scheduler:
         return len(self.queue)
 
     def pages_needed(self, req: Request) -> int:
-        """Prompt pages + the first decode page."""
-        return len(req.prompt) // self.pool.page_size + 1
+        """Prompt pages + the first decode page, minus the prefix pages a
+        radix-cache hit would serve (shared pages cost only a ref)."""
+        nb = len(req.prompt) // self.pool.page_size + 1
+        if self.cache is not None:
+            nb -= self.cache.match_pages(req.prompt)
+        return nb
 
     def admissible(self, req: Request, free_lanes: int,
                    committed_pages: int = 0) -> bool:
         """`committed_pages` reserves pages already promised to earlier
-        admissions in the same wave (they allocate after this check)."""
+        admissions in the same wave (they allocate after this check).
+        Radix-evictable pages count as free: the engine evicts
+        least-recently-used cache subtrees on allocation pressure."""
         if free_lanes <= 0:
             return False
         if self.pool is None:
             return True
-        return (self.pool.free_count - committed_pages
-                >= self.pages_needed(req))
+        free = self.pool.free_count - committed_pages
+        if self.cache is not None:
+            # matched-prefix pages may themselves be tree-only (evictable)
+            # right now, but committing to the hit refs them — don't count
+            # the same page as both "served by the cache" and "reclaimable"
+            free += max(0, self.cache.evictable()
+                        - self.cache.match_pages(req.prompt))
+        return free >= self.pages_needed(req)
 
     def admit(self, free_lanes: int) -> list[Request]:
-        """Pop FIFO-admissible requests for this step's prefill wave."""
-        out, committed = [], 0
-        while self.queue and self.admissible(self.queue[0],
-                                             free_lanes - len(out),
-                                             committed):
-            req = self.queue.popleft()
-            req.state = RequestState.PREFILL
-            if self.pool is not None:
-                committed += self.pages_needed(req)
-            out.append(req)
-            self.admitted += 1
+        """Pop admissible requests for this step's prefill wave.
+
+        Bounded-skip FIFO: scans past up to `max_skip` queued requests
+        that don't currently fit, admitting later ones that do.  Every
+        request jumped this way gets `.skipped += 1`; a request skipped
+        `starvation_limit` times becomes a hard barrier no one passes.
+        `max_skip=0` is strict FIFO (the pre-skip policy).
+        """
+        out: list[Request] = []
+        committed, passed = 0, []
+        idx = 0
+        while idx < len(self.queue) and len(out) < free_lanes:
+            req = self.queue[idx]
+            if self.admissible(req, free_lanes - len(out), committed):
+                del self.queue[idx]
+                req.state = RequestState.PREFILL
+                if self.pool is not None:
+                    committed += self.pages_needed(req)
+                out.append(req)
+                self.admitted += 1
+                for r in passed:
+                    r.skipped += 1
+                    self.skips += 1
+            elif (len(passed) >= self.max_skip
+                  or req.skipped >= self.starvation_limit):
+                break
+            else:
+                passed.append(req)
+                idx += 1
         return out
 
     def pick_victim(self, live: list[Request]) -> Request:
@@ -136,6 +185,9 @@ class Scheduler:
         req.state = RequestState.QUEUED
         req.lane = -1
         req.page_ids = []
+        req.pf_pos = 0
+        req.n_shared = 0
+        req.page_snaps = []
         req.preemptions += 1
         self.preemptions += 1
         self.queue.appendleft(req)
