@@ -13,6 +13,10 @@ CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
   train/dp<N>_intwire     — sharded step @ DP=N, integer-wire grad sync
   train/dp<N>_f32wire     — same layout, XLA f32 all-reduce sync
   train/dp_scaling        — dp4-vs-dp1 step-time ratio (int wire)
+  train/ckpt              — packed QTensor checkpoint: save/restore
+                            latency, packed-vs-dense-f32 state bytes
+                            (lossless resume format) and the int8 serving
+                            export ratio (qsave.export_int8, ≥3x)
 
 The DP rows run in a subprocess (virtual host devices must be configured
 before jax initializes) over a fixed n_shards=4, so every layout computes
@@ -94,7 +98,81 @@ def main():
                  f"tok_s={tokens / dt:.1f};steps={n_steps}")
         emit(f"train/{name}_speedup", 0.0,
              f"fused_vs_unfused={step_us['unfused'] / step_us['fused']:.2f}x")
+    _ckpt_bench(fast)
     _dp_scaling(fast)
+
+
+def _ckpt_bench(fast: bool):
+    """train/ckpt row: packed QTensor checkpoint save/restore latency and
+    bytes, vs a dense-f32 write of the SAME state, plus the lossy int8
+    serving-export ratio.
+
+    The lossless resume state is floored by the 24-bit k_WU master-weight
+    grid (~3 bytes/param — DESIGN.md §11), so packed-vs-f32 lands around
+    1.3-1.7x; the ≥3x criterion belongs to the int8 export."""
+    import shutil
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager, qsave
+    from repro.checkpoint.manager import _flatten_with_paths
+    from repro.core import preset
+    from repro.data import TokenTask
+    from repro.launch.train import make_train_step
+    from repro.models import build_model
+    from repro.optim import init_momentum
+
+    name, arch, batch_sz, seq = _configs(fast)[0]
+    qcfg = preset("full8", "native")
+    model = build_model(arch, qcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_momentum(params)
+    task = TokenTask(vocab=arch.vocab, seq_len=seq, global_batch=batch_sz)
+    batch = jax.tree.map(jnp.asarray, task.batch(0))
+    step_fn = jax.jit(make_train_step(model, qcfg, model.labels(params)))
+    # two real steps land every leaf on its WAGEUBN grid (params on the
+    # 2^(1-k_WU) grid, Momentum acc on 2^(1-k_Acc)) — the state a real
+    # elastic save cadence checkpoints
+    for i in range(2):
+        params, opt, m = step_fn(params, opt, batch, jnp.int32(i))
+    jax.block_until_ready(m["loss"])
+    state = {"params": params, "opt": opt}
+
+    root = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        packed = CheckpointManager(os.path.join(root, "q"), keep=1)
+        t0 = time.perf_counter()
+        packed.save(2, state, block=True)
+        save_us = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        restored, _, _ = packed.restore(state, step=2)
+        jax.block_until_ready(restored)
+        restore_us = (time.perf_counter() - t0) * 1e6
+        rep = packed.size_report(2)
+
+        dense = CheckpointManager(os.path.join(root, "f32"), keep=1,
+                                  packed=False)
+        dense.save(2, state, block=True)
+        dense_disk = dense.size_report(2)["disk_bytes"]
+
+        _, fmt8 = qsave.pack_tree(
+            _flatten_with_paths(qsave.export_int8(params)))
+        int8_ratio = qsave.report(fmt8)["ratio"]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    state_ratio = rep["ratio"]
+    assert int8_ratio >= 3.0, (
+        f"int8 serving export only {int8_ratio:.2f}x smaller than dense "
+        f"f32 — the QTensor payload packing regressed")
+    emit("train/ckpt", save_us,
+         f"restore_us={restore_us:.0f};state_bytes={rep['ckpt_bytes_q']};"
+         f"f32_bytes={rep['ckpt_bytes_f32_dense']};"
+         f"disk_bytes={rep['disk_bytes']};dense_disk={dense_disk};"
+         f"state_vs_f32={state_ratio:.2f}x;int8_vs_f32={int8_ratio:.2f}x;"
+         f"arch={name}")
 
 
 # --------------------------------------------------------------------------

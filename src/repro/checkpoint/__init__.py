@@ -1,3 +1,4 @@
+from . import qsave
 from .manager import CheckpointManager
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "qsave"]

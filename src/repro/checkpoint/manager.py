@@ -1,11 +1,18 @@
 """Fault-tolerant checkpointing: atomic, async, retention, topology-agnostic.
 
-Design (DESIGN.md §5):
-  * every leaf is saved as a full logical array (npz) keyed by its pytree
+Design (DESIGN.md §5/§11):
+  * every leaf is saved as a full logical array keyed by its pytree
     path -> restore works under ANY mesh/sharding (elastic re-scale);
+  * leaves are stored in the QTensor-native packed encoding (qsave.py):
+    integer payloads + pow2 grid exponents, never densified to f32 —
+    int8 QTensor payloads cost 1 byte/element on disk, k_WU-grid master
+    weights 3, Momentum accumulators 2 (`packed=False` writes dense f32);
   * writes go to `<dir>/tmp-<step>` then os.rename -> a crash mid-write can
-    never corrupt the latest checkpoint (atomic on POSIX);
-  * an async writer thread overlaps serialization with training steps;
+    never corrupt the latest checkpoint (atomic on POSIX); stale `tmp-*`
+    dirs left by a killed writer are swept at construction;
+  * an async writer thread overlaps serialization/packing with training
+    steps; the device->host snapshot (`np.asarray` per leaf) is the only
+    work on the caller's critical path;
   * retention keeps the newest `keep` checkpoints;
   * restore() optionally device_puts leaves onto a target mesh/sharding.
 """
@@ -19,6 +26,8 @@ import time
 
 import jax
 import numpy as np
+
+from . import qsave
 
 
 def _path_key(path) -> str:
@@ -42,13 +51,25 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True,
+                 packed: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
+        self.packed = packed
         os.makedirs(directory, exist_ok=True)
+        # sweep staging dirs abandoned by a killed writer: they are never
+        # restorable (publish is the rename) and a name collision with a
+        # future save of the same step must start from a clean slate
+        for name in os.listdir(directory):
+            if name.startswith("tmp-"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
         self._lock = threading.Lock()
         self._pending: threading.Thread | None = None
+        self._write_error: BaseException | None = None
+        self._fail_next_write = False       # chaos hook: die before publish
+        self.last_report: dict | None = None
 
     # ------------- save -------------
 
@@ -59,12 +80,18 @@ class CheckpointManager:
                 "time": time.time()}
         if self.async_write and not block:
             self.wait()
-            t = threading.Thread(target=self._write, args=(step, arrays,
-                                                           meta), daemon=True)
+            t = threading.Thread(target=self._write_guarded,
+                                 args=(step, arrays, meta), daemon=True)
             t.start()
             self._pending = t
         else:
             self._write(step, arrays, meta)
+
+    def _write_guarded(self, step, arrays, meta):
+        try:
+            self._write(step, arrays, meta)
+        except BaseException as e:  # noqa: BLE001 — surfaced by wait()
+            self._write_error = e
 
     def _write(self, step, arrays, meta):
         with self._lock:
@@ -73,18 +100,32 @@ class CheckpointManager:
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            if self.packed:
+                payload, fmt = qsave.pack_tree(arrays)
+                meta = dict(meta, qsave=fmt, report=qsave.report(fmt))
+            else:
+                payload = arrays
+            np.savez(os.path.join(tmp, "arrays.npz"), **payload)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+            if self._fail_next_write:       # simulated kill -9 mid-save:
+                self._fail_next_write = False   # tmp written, never published
+                raise RuntimeError(f"injected writer crash at step {step}")
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)           # atomic publish
+            self.last_report = meta.get("report")
             self._gc()
 
     def wait(self):
+        """Join the pending async write; re-raise a writer-thread failure
+        (the caller's crash/restart loop owns the recovery policy)."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._write_error is not None:
+            e, self._write_error = self._write_error, None
+            raise e
 
     def _gc(self):
         steps = self.all_steps()
@@ -105,14 +146,36 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def meta(self, step: int | None = None) -> dict:
+        """meta.json of a checkpoint (step/aux/time + qsave format/report)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step-{step:010d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            return json.load(f)
+
+    def size_report(self, step: int | None = None) -> dict:
+        """qsave bytes-vs-dense-f32 report + actual on-disk bytes."""
+        if step is None:
+            step = self.latest_step()
+        meta = self.meta(step)
+        d = os.path.join(self.dir, f"step-{step:010d}")
+        disk = sum(os.path.getsize(os.path.join(d, n)) for n in os.listdir(d))
+        rep = dict(meta.get("report") or {})
+        rep["disk_bytes"] = disk
+        return rep
+
     def restore(self, target_tree, step: int | None = None, mesh=None,
                 pspec_tree=None):
-        """Restore into the structure of `target_tree`.
+        """Restore into the structure of `target_tree` (arrays or
+        ShapeDtypeStructs — only .shape/.dtype are read).
 
         If mesh+pspec_tree given, leaves are placed with those shardings —
         this is the elastic-rescale path: a checkpoint written under one
-        mesh restores under any other.
-        Returns (tree, step, aux).
+        mesh restores under any other.  Leaf dtypes follow the target tree
+        on BOTH paths.  Returns (tree, step, aux).
         """
         if step is None:
             step = self.latest_step()
@@ -122,19 +185,33 @@ class CheckpointManager:
         data = np.load(os.path.join(d, "arrays.npz"))
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
+        fmt = meta.get("qsave")
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+        need = {_path_key(path) for path, _ in flat}
+        have = set(fmt) if fmt is not None else set(data.files)
+        if need != have:
+            raise ValueError(
+                f"checkpoint step {step} does not match the target tree: "
+                f"missing keys {sorted(need - have)[:8]}, "
+                f"unexpected keys {sorted(have - need)[:8]} "
+                f"(checkpoint has {len(have)} arrays, target wants "
+                f"{len(need)})")
         leaves = []
         specs = (jax.tree_util.tree_leaves(pspec_tree)
                  if pspec_tree is not None else [None] * len(flat))
         from jax.sharding import NamedSharding
         for (path, ref), spec in zip(flat, specs):
             key = _path_key(path)
-            arr = data[key]
-            assert arr.shape == ref.shape, (key, arr.shape, ref.shape)
+            arr = (qsave.unpack_array(data, key, fmt[key])
+                   if fmt is not None else data[key])
+            if arr.shape != ref.shape:
+                raise ValueError(f"checkpoint leaf {key}: shape {arr.shape} "
+                                 f"!= target {ref.shape}")
+            arr = arr.astype(ref.dtype)
             if mesh is not None and spec is not None:
                 leaves.append(jax.device_put(arr, NamedSharding(mesh, spec)))
             else:
-                leaves.append(jax.device_put(arr.astype(ref.dtype)))
+                leaves.append(jax.device_put(arr))
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         return tree, meta["step"], meta["aux"]

@@ -1,0 +1,166 @@
+"""QTensor-native checkpoint encoding: integers + pow2 exponents on disk.
+
+The training state of this stack is integer-structured by construction
+(DESIGN.md §11): after the first optimizer step every "w" param leaf lies
+on the fixed 2^(1-k_WU) grid (Eq. 24), Momentum accumulators on the
+2^(1-k_Acc) grid (Eq. 20), norm params on their 2^(1-k) grids, and QTensor
+leaves (KV caches, wire payloads) already carry int8/int16 payloads with
+pow2 scales.  The dense-f32 npz format threw that structure away — 4 bytes
+per element regardless of information content.
+
+`pack_tree` recovers it losslessly, per leaf:
+
+  * integer/bool leaves (QTensor payloads, step counters) store as-is —
+    never densified to f32;
+  * float leaves are scanned for their exact pow2 grid (one frexp pass over
+    the mantissas: the grid exponent is the minimum least-significant-bit
+    exponent).  On-grid leaves store as `payload * 2^e` with the smallest
+    integer container that holds the payload:
+        |payload| <= 2^7-1   -> int8              (1 B/elem, 4x)
+        |payload| <= 2^15-1  -> int16             (2 B/elem, 2x)
+        |payload| <= 2^23-1  -> int8 hi + uint16 lo  (3 B/elem, 1.33x —
+                                the k_WU=24 master-weight case)
+        |payload| <= 2^31-1  -> int32
+    off-grid leaves (fresh inits, exempt fp32 leaves) fall back to raw f32.
+
+Every encoding is bit-exact on roundtrip: grid values n * 2^e with
+|n| < 2^24 are exactly representable in f32, and the pack/unpack arithmetic
+runs in f64 where both the product and the payload are exact.
+
+`export_int8` is the separate LOSSY artifact: every float leaf quantized to
+an int8 QTensor on its pow2-amax grid — the forward-pass weight payloads a
+serving engine consumes, ~4x smaller than dense f32.  It is NOT the resume
+format (the 24-bit masters floor a bit-exact checkpoint at ~1.3x for the
+param plane; see DESIGN.md §11 for the information-theoretic accounting).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# fmt entry: {"enc": one of ENCODINGS, "e": grid exponent, "n": elem count,
+#             "dtype": source dtype string}
+ENCODINGS = ("raw", "i8", "i16", "hilo", "i32")
+
+_LO_SUFFIX = "//lo"
+
+
+def grid_exponent(a: np.ndarray):
+    """(e, max_payload) for the exact pow2 grid of `a`, or (None, None).
+
+    e is the largest exponent such that every finite value of `a` is an
+    integer multiple of 2^e; max_payload = max|a| / 2^e.  Exact: computed
+    from f64 frexp mantissas (f32 inputs are exact in f64).
+    """
+    flat = np.asarray(a, np.float64).reshape(-1)
+    nz = flat[flat != 0.0]
+    if nz.size == 0:
+        return 0, 0
+    if not np.isfinite(nz).all():
+        return None, None
+    m, ex = np.frexp(nz)                      # nz = m * 2^ex, |m| in [.5, 1)
+    m24 = np.abs(m) * (2.0 ** 53)             # f64 mantissa as an integer
+    v = m24.astype(np.int64)
+    if not np.array_equal(v.astype(np.float64), m24):
+        return None, None                     # not exactly integral (paranoia)
+    tz = np.log2((v & -v).astype(np.float64)).astype(np.int64)
+    lsb = ex - 53 + tz                        # per-element lsb exponent
+    e = int(lsb.min())
+    bits = int((ex.max() - e))                # magnitude bits of max payload
+    if bits > 31:
+        return None, None
+    max_payload = int(np.abs(nz).max() * (2.0 ** -e))
+    return e, max_payload
+
+
+def pack_array(a: np.ndarray):
+    """-> (dict of arrays to store, fmt entry).  Lossless by construction."""
+    a = np.asarray(a)
+    base = {"n": int(a.size), "dtype": str(a.dtype)}
+    if a.dtype.kind in "iub":                 # integer payloads stay integers
+        return {"": a}, dict(base, enc="raw")
+    if a.dtype not in (np.float32, np.float64):
+        return {"": a}, dict(base, enc="raw")   # bf16/f16: passthrough
+    e, mp = grid_exponent(a)
+    if e is None:
+        return {"": a}, dict(base, enc="raw")
+    p = np.round(np.asarray(a, np.float64) * (2.0 ** -e)).astype(np.int64)
+    if mp <= 2 ** 7 - 1:
+        return {"": p.astype(np.int8)}, dict(base, enc="i8", e=e)
+    if mp <= 2 ** 15 - 1:
+        return {"": p.astype(np.int16)}, dict(base, enc="i16", e=e)
+    if mp <= 2 ** 23 - 1:                     # the k_WU=24 master-weight case
+        hi = (p >> 16).astype(np.int8)
+        lo = (p - (hi.astype(np.int64) << 16)).astype(np.uint16)
+        return {"": hi, _LO_SUFFIX: lo}, dict(base, enc="hilo", e=e)
+    return {"": p.astype(np.int32)}, dict(base, enc="i32", e=e)
+
+
+def unpack_array(load, key: str, fmt: dict) -> np.ndarray:
+    """Inverse of pack_array given the npz mapping and this key's fmt."""
+    enc = fmt["enc"]
+    a = load[key]
+    if enc == "raw":
+        return a
+    if enc == "hilo":
+        p = (a.astype(np.int64) << 16) + load[key + _LO_SUFFIX].astype(np.int64)
+    else:
+        p = a.astype(np.int64)
+    v = p.astype(np.float64) * (2.0 ** fmt["e"])
+    return v.astype(np.dtype(fmt["dtype"]))
+
+
+def pack_tree(arrays: dict):
+    """{key: np.ndarray} -> (npz payload dict, {key: fmt entry})."""
+    out, fmt = {}, {}
+    for key, a in arrays.items():
+        stored, f = pack_array(a)
+        for suffix, arr in stored.items():
+            out[key + suffix] = arr
+        fmt[key] = f
+    return out, fmt
+
+
+def stored_bytes(fmt_entry: dict) -> int:
+    n = fmt_entry["n"]
+    enc = fmt_entry["enc"]
+    if enc == "raw":
+        return n * np.dtype(fmt_entry["dtype"]).itemsize
+    return n * {"i8": 1, "i16": 2, "hilo": 3, "i32": 4}[enc]
+
+
+def report(fmt: dict) -> dict:
+    """Bytes-vs-dense-f32 accounting, same shape as PagePool.report()."""
+    q = sum(stored_bytes(f) for f in fmt.values())
+    dense = sum(4 * f["n"] for f in fmt.values())
+    encs = {}
+    for f in fmt.values():
+        encs[f["enc"]] = encs.get(f["enc"], 0) + 1
+    return {"ckpt_bytes_q": q,
+            "ckpt_bytes_f32_dense": dense,
+            "ratio": dense / max(q, 1),
+            "leaf_encodings": encs}
+
+
+def export_int8(tree, k: int = 8):
+    """Serving-export snapshot: float leaves -> int8 QTensors (LOSSY).
+
+    Quantizes through the "scaled" registry quantizer (pow2-amax grid, the
+    forward-pass Q_A semantics) so the payloads are exactly what an int8
+    engine would compute from the dense weights.  Non-float leaves pass
+    through.  Checkpointing the result stores ~1 byte/element (payloads are
+    integer dtype -> `pack_array` raw path) vs 4 for dense f32.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.qtensor import get_quantizer
+
+    qz = get_quantizer("scaled", k)
+
+    def f(x):
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return qz.quantize(x).drop_carrier()
+
+    return jax.tree.map(f, tree)

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 DATA_AXIS = "data"
@@ -126,3 +127,32 @@ def zero_opt_specs(params):
     from repro.optim import MomentumState
     return MomentumState(acc=jax.tree.map(lambda _: P(DATA_AXIS), params),
                          step=P())
+
+
+def zero_template(params, dp: int):
+    """ShapeDtypeStruct MomentumState for the ZeRO-1 layout under `dp` —
+    the restore target for a checkpoint written under that membership."""
+    from repro.optim import MomentumState
+    acc = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((dp * zero_chunk_len(p.size, dp),),
+                                       p.dtype), params)
+    return MomentumState(acc=acc,
+                         step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def zero_reshard(acc_tree, params, dp_new: int):
+    """Re-chunk flat ZeRO-1 accumulator leaves for a new DP membership:
+    (dp_old * chunk_old,) -> (dp_new * chunk_new,).
+
+    Bit-exact by the layout's own algebra: the logical accumulator is the
+    first `p.size` entries of the flat leaf and the tail is padding that
+    both STARTS zero (zero_init_momentum) and STAYS zero (the elementwise
+    update of a zero-param/zero-grad slot is zero — launch/train.py
+    `_zero1_update`), so resharding is exactly unpad + repad with zeros.
+    Runs on host numpy: reshard happens between memberships, off-mesh.
+    """
+    def f(a, p):
+        flat = np.asarray(a).reshape(-1)[: int(np.prod(p.shape, dtype=int))]
+        c = zero_chunk_len(flat.size, dp_new)
+        return np.pad(flat, (0, dp_new * c - flat.size))
+    return jax.tree.map(f, acc_tree, params)

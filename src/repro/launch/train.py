@@ -423,6 +423,18 @@ def main(argv=None):
                    choices=["int_ring", "psum"])
     p.add_argument("--opt-shard", default="replicated",
                    choices=["replicated", "zero1"])
+    p.add_argument("--elastic", action="store_true",
+                   help="drive the run through the ElasticRunner (async "
+                        "QTensor checkpoints, restore-on-failure, bit-exact "
+                        "DP reshard on membership change); requires "
+                        "--ckpt-dir")
+    p.add_argument("--resume", action="store_true",
+                   help="resume from the latest checkpoint in --ckpt-dir "
+                        "(elastic: works even if it was written under a "
+                        "different --dp, as long as --n-shards matches)")
+    p.add_argument("--rebalance-flags", type=int, default=0,
+                   help="elastic: shrink dp to the next divisor of n_shards "
+                        "after this many straggler flags (0 = off)")
     args = p.parse_args(argv)
 
     acfg = get_arch(args.arch)
@@ -441,6 +453,39 @@ def main(argv=None):
     key = jax.random.PRNGKey(0)
     params = model.init(key)
     labels_tree = model.labels(params)
+
+    if args.elastic:
+        if not args.ckpt_dir:
+            p.error("--elastic requires --ckpt-dir")
+        from repro.checkpoint import CheckpointManager
+        from repro.launch import shard as S
+        from repro.runtime import ElasticRunner
+
+        n_shards = args.n_shards or args.dp
+        opt = (S.zero_init_momentum(params, args.dp)
+               if args.opt_shard == "zero1" else init_momentum(params))
+        ckpt = CheckpointManager(args.ckpt_dir)
+        runner = ElasticRunner(
+            model, qcfg, labels_tree, ckpt, task.batch, dp=args.dp,
+            tp=args.tp, n_shards=n_shards, opt_shard=args.opt_shard,
+            lr=args.lr, wire_bits=args.wire_bits, grad_sync=args.grad_sync,
+            save_every=args.save_every,
+            rebalance_flags=args.rebalance_flags)
+        print(f"[elastic] dp={args.dp} tp={args.tp} n_shards={n_shards} "
+              f"opt={args.opt_shard} save_every={args.save_every} "
+              f"resume={args.resume}")
+        t0 = time.time()
+        params, opt, metrics = runner.run(params, opt, args.steps,
+                                          resume=args.resume)
+        rep = ckpt.size_report()
+        print(f"[elastic] done in {time.time() - t0:.1f}s loss "
+              f"{float(metrics['loss']):.4f} restarts={runner.restarts} "
+              f"reshards={len(runner.reshards)}")
+        print(f"[ckpt] {rep['ckpt_bytes_q']} B packed vs "
+              f"{rep['ckpt_bytes_f32_dense']} B dense-f32 "
+              f"({rep['ratio']:.2f}x)")
+        return
+
     if sharded:
         from repro.launch import shard as S
         from repro.launch.mesh import make_cpu_mesh
@@ -469,7 +514,7 @@ def main(argv=None):
     if args.ckpt_dir:
         from repro.checkpoint import CheckpointManager
         ckpt = CheckpointManager(args.ckpt_dir)
-        if ckpt.latest_step() is not None:
+        if args.resume and ckpt.latest_step() is not None:
             (params, opt), start, _ = ckpt.restore((params, opt))
             print(f"resumed from step {start}")
 

@@ -1,9 +1,10 @@
 from .compress import (compressed_psum_int, ring_allreduce_int,
                        ring_reduce_scatter_int, wire_limit, wire_quantize,
                        wire_shift, wire_sync_mean)
+from .elastic import ElasticRunner, next_divisor_down
 from .fault import StepWatchdog, TrainRunner, SimulatedFailure
 
 __all__ = ["compressed_psum_int", "ring_allreduce_int",
            "ring_reduce_scatter_int", "wire_limit", "wire_quantize",
            "wire_shift", "wire_sync_mean", "StepWatchdog", "TrainRunner",
-           "SimulatedFailure"]
+           "SimulatedFailure", "ElasticRunner", "next_divisor_down"]

@@ -1,0 +1,301 @@
+"""Elastic int8 training runtime (DESIGN.md §11).
+
+Composes the three pieces that existed but never met — the DP×TP sharded
+train step (launch/train.py), the QTensor-native checkpoint layer
+(checkpoint/manager.py + qsave.py) and the fault primitives (fault.py) —
+into one runner that survives preemption and DP membership changes
+BIT-EXACTLY:
+
+  * async QTensor checkpoints on a save cadence: the device->host snapshot
+    is the only work on the step's critical path; packing (integer payloads
+    + pow2 grid exponents, never densified to f32) and the atomic publish
+    run on the writer thread;
+  * restore-on-failure: any exception restores the latest checkpoint and
+    replays — stochastic-rounding keys and batches derive from the step
+    index, so the resumed trajectory equals the uninterrupted one bit for
+    bit (tests/test_elastic.py chaos suite);
+  * deterministic DP reshard: because PR 5 parameterized the algorithm by
+    `n_shards` (virtual batch shards = quantization granularity), not by
+    devices, a checkpoint written under dp_old resumes under any dp_new
+    dividing n_shards with an identical trajectory.  Params are replicated
+    (re-placed through the restore mesh path); the flat ZeRO-1 Momentum
+    chunks re-chunk via launch/shard.zero_reshard (unpad + repad — padding
+    provably stays zero);
+  * watchdog-triggered rebalance: when StepWatchdog flags enough
+    stragglers, the runner shrinks DP to the next divisor of n_shards —
+    the virtual shards redistribute over the surviving devices and the
+    trajectory still does not change.
+
+The one invariant the runner enforces rather than recovers from: `n_shards`
+(and the opt_shard layout family) must match the checkpoint — changing the
+quantization granularity mid-run would silently change the math, so it
+raises instead.
+"""
+from __future__ import annotations
+
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault import SimulatedFailure, StepWatchdog
+
+log = logging.getLogger("repro.runtime.elastic")
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def next_divisor_down(n_shards: int, dp: int) -> int:
+    """Largest dp' < dp with n_shards % dp' == 0 (rebalance target)."""
+    for d in range(dp - 1, 0, -1):
+        if n_shards % d == 0:
+            return d
+    return 1
+
+
+class ElasticRunner:
+    """Elastic checkpoint/restore/reshard driver over the sharded step.
+
+    Args:
+      model: built with tp_size == tp (build_model).
+      qcfg / labels: the training QConfig and the param-label tree.
+      ckpt: CheckpointManager over {"params": ..., "opt": ...} trees.
+      batch_fn: step index -> HOST batch tree (must be deterministic in the
+        step index — the bit-exact-resume contract replays steps).
+      dp / tp: initial mesh; n_shards: virtual-shard count (fixed for the
+        life of the run — the quantization granularity).
+      opt_shard: "replicated" | "zero1" (flat chunked Momentum, tp == 1).
+      rebalance_flags: >0 enables watchdog-driven shrink after that many
+        straggler flags since the last (re)start or reshard.
+    """
+
+    def __init__(self, model, qcfg, labels, ckpt, batch_fn, *,
+                 dp: int, n_shards: int, tp: int = 1,
+                 opt_shard: str = "replicated", lr: float = 0.05,
+                 mom: float = 0.75, dr_bits: int = 8, wire_bits: int = 16,
+                 grad_sync: str = "int_ring", save_every: int = 50,
+                 max_restarts: int = 10,
+                 watchdog: StepWatchdog | None = None,
+                 rebalance_flags: int = 0, log_every: int = 0):
+        if n_shards % dp:
+            raise ValueError(f"n_shards={n_shards} must be divisible by "
+                             f"dp={dp}")
+        self.model, self.qcfg, self.labels = model, qcfg, labels
+        self.ckpt = ckpt
+        self.batch_fn = batch_fn
+        self.dp, self.tp, self.n_shards = dp, tp, n_shards
+        self.opt_shard = opt_shard
+        self.lr, self.mom, self.dr_bits = lr, mom, dr_bits
+        self.wire_bits, self.grad_sync = wire_bits, grad_sync
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StepWatchdog()
+        self.rebalance_flags = rebalance_flags
+        self.log_every = log_every
+        self.restarts = 0
+        self.reshards: list[tuple[int, int, int]] = []  # (step, dp_old, new)
+        self._flags_since_rebalance = 0
+        self._built: dict[int, tuple] = {}      # dp -> (mesh, fn, specs)
+        self._ptmpl = None                      # param ShapeDtypeStructs
+
+    # ------------- step/mesh construction -------------
+
+    def _engage(self, dp: int):
+        """(mesh, jitted step, specs) for a DP membership, cached per dp."""
+        if dp not in self._built:
+            from repro.launch.mesh import make_cpu_mesh
+            from repro.launch.train import make_sharded_train_step
+
+            mesh = make_cpu_mesh(dp, self.tp)
+            raw, specs = make_sharded_train_step(
+                self.model, self.qcfg, self.labels, mesh, self._ptmpl,
+                lr=self.lr, mom=self.mom, dr_bits=self.dr_bits,
+                n_shards=self.n_shards, wire_bits=self.wire_bits,
+                grad_sync=self.grad_sync, opt_shard=self.opt_shard)
+            self._built[dp] = (mesh, jax.jit(raw, donate_argnums=(0, 1)),
+                               specs)
+        return self._built[dp]
+
+    def _place(self, params, opt):
+        from repro.launch import shard as S
+        mesh, _, specs = self._engage(self.dp)
+        return (S.shard_arrays(mesh, params, specs["params"]),
+                S.shard_arrays(mesh, opt, specs["opt"]))
+
+    def _opt_template(self, dp: int):
+        from repro.launch import shard as S
+        if self.opt_shard == "zero1":
+            return S.zero_template(self._ptmpl, dp)
+        from repro.optim import MomentumState
+        return MomentumState(acc=self._ptmpl,
+                             step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    # ------------- checkpoint / reshard -------------
+
+    def _aux(self):
+        return {"dp": self.dp, "tp": self.tp, "n_shards": self.n_shards,
+                "opt_shard": self.opt_shard}
+
+    def save(self, step: int, params, opt, block=False):
+        self.ckpt.save(step, {"params": params, "opt": opt},
+                       aux=self._aux(), block=block)
+
+    def restore(self):
+        """Latest checkpoint -> (params, opt, step) PLACED under the
+        CURRENT membership, resharding the ZeRO-1 chunks if the checkpoint
+        was written under a different dp.  Raises FileNotFoundError when no
+        checkpoint exists and ValueError on a granularity mismatch."""
+        from repro.launch import shard as S
+
+        step = self.ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.ckpt.dir}")
+        aux = self.ckpt.meta(step)["aux"]
+        if aux.get("n_shards", self.n_shards) != self.n_shards:
+            raise ValueError(
+                f"checkpoint n_shards={aux['n_shards']} != runner "
+                f"n_shards={self.n_shards}: the virtual-shard count is the "
+                f"quantization granularity — changing it breaks the "
+                f"bit-exact trajectory (start a fresh run instead)")
+        if aux.get("opt_shard", self.opt_shard) != self.opt_shard:
+            raise ValueError(
+                f"checkpoint opt_shard={aux['opt_shard']!r} != runner "
+                f"opt_shard={self.opt_shard!r}")
+        dp_ckpt = int(aux.get("dp", self.dp))
+        target = {"params": self._ptmpl, "opt": self._opt_template(dp_ckpt)}
+        mesh, _, specs = self._engage(self.dp)
+        if dp_ckpt == self.dp or self.opt_shard != "zero1":
+            # same chunking (or replicated opt): leaves re-place directly
+            # through the restore mesh path under the current membership
+            state, got, _ = self.ckpt.restore(
+                target, step=step, mesh=mesh,
+                pspec_tree={"params": specs["params"],
+                            "opt": specs["opt"]})
+            return state["params"], state["opt"], got
+        # dp changed under ZeRO-1: restore to host, re-chunk the flat
+        # accumulator leaves (bit-exact unpad+repad), then re-place
+        state, got, _ = self.ckpt.restore(target, step=step)
+        opt = state["opt"]
+        acc = S.zero_reshard(jax.device_get(opt.acc), self._ptmpl, self.dp)
+        opt = opt._replace(acc=acc)
+        log.warning("resharded ZeRO-1 chunks dp=%d -> dp=%d at step %d",
+                    dp_ckpt, self.dp, got)
+        params, opt = self._place(jax.device_get(state["params"]), opt)
+        return params, opt, got
+
+    def resize(self, dp_new: int, params, opt, *, step: int | None = None):
+        """Live membership change: reshard the current device state onto a
+        dp_new mesh.  Bit-exact — `n_shards` is unchanged, so the step
+        math is too; only the placement (and ZeRO-1 chunking) moves."""
+        from repro.launch import shard as S
+        if self.n_shards % dp_new:
+            raise ValueError(f"dp_new={dp_new} must divide "
+                             f"n_shards={self.n_shards}")
+        host_p = jax.device_get(params)
+        host_o = jax.device_get(opt)
+        if self.opt_shard == "zero1" and dp_new != self.dp:
+            host_o = host_o._replace(
+                acc=S.zero_reshard(host_o.acc, self._ptmpl, dp_new))
+        self.reshards.append((-1 if step is None else step, self.dp, dp_new))
+        self.dp = dp_new
+        self.watchdog.reset()
+        self._flags_since_rebalance = 0
+        return self._place(host_p, host_o)
+
+    # ------------- the elastic loop -------------
+
+    def run(self, params, opt, n_steps: int, *, start_step: int = 0,
+            resume: bool = False, fail_at=None,
+            fail_save_at: int | None = None,
+            resize_at: dict | None = None):
+        """Train to n_steps with elastic recovery.  Returns
+        (host_params, host_opt, last_metrics).
+
+        params/opt: HOST (or replicated device) trees for a cold start —
+        the runner places them; with resume=True the latest checkpoint wins
+        when one exists.  Chaos hooks: `fail_at` (step or iterable of steps
+        that raise SimulatedFailure), `fail_save_at` (the async writer of
+        the save at that step dies before publishing — a kill -9 mid-save),
+        `resize_at` ({step: dp_new} planned membership changes).
+        """
+        from repro.launch.shard import put_batch
+        if self._ptmpl is None:
+            self._ptmpl = _sds(params)
+        fail_at = (set() if fail_at is None else
+                   {fail_at} if isinstance(fail_at, int) else set(fail_at))
+        resize_at = dict(resize_at or {})
+        # host copy of the cold-start state: the jitted step donates its
+        # input buffers, so a cold restart cannot reuse the placed arrays
+        init_host = (jax.tree.map(np.asarray, params),
+                     jax.tree.map(np.asarray, opt))
+        step = start_step
+        if resume and self.ckpt.latest_step() is not None:
+            params, opt, step = self.restore()
+            log.warning("resumed from checkpoint at step %d (dp=%d)",
+                        step, self.dp)
+        else:
+            params, opt = self._place(params, opt)
+        mesh, fn, _ = self._engage(self.dp)
+        metrics = None
+        while step < n_steps:
+            try:
+                while step < n_steps:
+                    if step in resize_at and resize_at[step] != self.dp:
+                        params, opt = self.resize(resize_at.pop(step),
+                                                  params, opt, step=step)
+                        mesh, fn, _ = self._engage(self.dp)
+                    t0 = time.time()
+                    if step in fail_at:
+                        fail_at.discard(step)       # fail exactly once
+                        raise SimulatedFailure(f"injected at step {step}")
+                    batch = put_batch(mesh, self.batch_fn(step))
+                    params, opt, metrics = fn(params, opt, batch,
+                                              jnp.int32(step))
+                    if self.watchdog.observe(step, time.time() - t0):
+                        self._flags_since_rebalance += 1
+                    step += 1
+                    if step % self.save_every == 0 or step == n_steps:
+                        if fail_save_at is not None and step == fail_save_at:
+                            fail_save_at = None
+                            self.ckpt._fail_next_write = True
+                        self.save(step, params, opt)
+                    if self.log_every and step % self.log_every == 0:
+                        log.info("step %d loss %.4f dp=%d", step,
+                                 float(metrics["loss"]), self.dp)
+                    if (self.rebalance_flags and self.dp > 1
+                            and self._flags_since_rebalance
+                            >= self.rebalance_flags):
+                        dp_new = next_divisor_down(self.n_shards, self.dp)
+                        log.warning("watchdog rebalance at step %d: "
+                                    "dp %d -> %d", step, self.dp, dp_new)
+                        params, opt = self.resize(dp_new, params, opt,
+                                                  step=step)
+                        mesh, fn, _ = self._engage(self.dp)
+            except Exception as e:  # noqa: BLE001 — any fault restarts
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                log.warning("step %d failed (%s); restoring latest "
+                            "checkpoint", step, e)
+                try:                    # a mid-save writer death surfaces
+                    self.ckpt.wait()    # here — swallow it, the restore
+                except Exception:       # below decides what state survives
+                    pass
+                try:
+                    params, opt, step = self.restore()
+                except FileNotFoundError:
+                    step = start_step   # no checkpoint yet: cold restart
+                    params, opt = self._place(*init_host)
+        try:
+            self.ckpt.wait()
+        except Exception as e:  # noqa: BLE001 — final async write died:
+            log.warning("final async save failed (%s); rewriting "
+                        "synchronously", e)
+            self.save(step, params, opt, block=True)
+        return (jax.device_get(params), jax.device_get(opt), metrics)

@@ -1,18 +1,23 @@
-"""Fault tolerance: watchdog, straggler policy, auto-resume train runner.
+"""Fault tolerance primitives: watchdog, simple auto-resume train runner.
 
-Single-process realization of the multi-pod control plane (DESIGN.md §5):
-  * StepWatchdog — tracks per-step wall times; flags stragglers by a
-    deadline policy (median * factor).  On a real pod the flagged worker is
-    evicted and its data shard reassigned (the deterministic data pipeline
-    makes reassignment trivial — see data/synthetic.py).  The serving
-    engine times every fused decode step through the same watchdog:
+  * StepWatchdog — tracks per-step wall times over a bounded rolling
+    window; flags stragglers by a deadline policy (median * factor).  The
+    serving engine times every fused decode step through the same watchdog:
     flagged steps log here and surface as `straggler_steps` in
-    `serving.Engine.metrics()` (DESIGN.md §7).
+    `serving.Engine.metrics()` (DESIGN.md §7).  `reset()` clears the stats
+    when the step-time baseline legitimately changes (e.g. after an elastic
+    reshard moves virtual shards across devices).
   * TrainRunner — wraps the jitted step in a crash/restart loop: on ANY
     exception it restores the latest checkpoint and continues.  Combined
     with deterministic data + stochastic-rounding keys derived from the step
     counter, a restart reproduces the exact same trajectory (tested).
   * SimulatedFailure — fault-injection hook for tests/chaos drills.
+
+The straggler-eviction / membership-change control plane these primitives
+were designed for is implemented in `runtime/elastic.py` (ElasticRunner,
+DESIGN.md §11): it composes this watchdog with the sharded train step and
+the QTensor-native checkpoint layer into bit-exact preemption recovery and
+DP reshard.  TrainRunner remains the single-device (unsharded-step) loop.
 """
 from __future__ import annotations
 
@@ -28,15 +33,30 @@ class SimulatedFailure(RuntimeError):
 
 
 class StepWatchdog:
-    def __init__(self, factor: float = 3.0, warmup: int = 5):
+    def __init__(self, factor: float = 3.0, warmup: int = 5,
+                 window: int = 256):
         self.factor = factor
         self.warmup = warmup
+        self.window = window
         self.times: list[float] = []
         self.flags: list[int] = []
 
+    def reset(self):
+        """Clear the timing stats (keeps config).  Call when the step-time
+        baseline legitimately changes — e.g. after an elastic reshard — so
+        the next steps are not judged against the old layout's median."""
+        self.times.clear()
+        self.flags.clear()
+
     def observe(self, step: int, dt: float) -> bool:
-        """Returns True if this step is a straggler by the deadline policy."""
+        """Returns True if this step is a straggler by the deadline policy.
+
+        The history is a rolling window of the last `window` step times —
+        long runs neither grow memory without bound nor freeze the median
+        on ancient steps."""
         self.times.append(dt)
+        if len(self.times) > self.window:
+            del self.times[: len(self.times) - self.window]
         if len(self.times) <= self.warmup:
             return False
         hist = sorted(self.times[:-1])

@@ -69,6 +69,110 @@ def test_elastic_restore_new_sharding(tmp_path):
     assert got["w"].sharding.spec == P("data", None)
 
 
+def test_packed_encoding_roundtrip(tmp_path):
+    """Grid-structured training state packs to integer containers on disk
+    (hilo for k_WU=24 masters, i16 for k_Acc=13 accumulators, raw for int
+    payloads) and roundtrips bit-exactly."""
+    from repro.checkpoint import qsave
+
+    w = (np.random.default_rng(0).integers(-2**23 + 1, 2**23, (64, 32))
+         .astype(np.float32) * 2.0**-23)        # k_WU=24 grid
+    acc = (np.random.default_rng(1).integers(-2**12 + 1, 2**12, (64,))
+           .astype(np.float32) * 2.0**-12)      # k_Acc=13 grid
+    # >31 bits between the smallest lsb and the largest magnitude -> no
+    # integer container fits -> raw f32 fallback (e.g. a fresh init)
+    off = np.array([1e-20, 1.0 + 2.0**-23] * 4, np.float32)
+    tree = {"w": w, "opt": {"acc": acc}, "kv": np.ones((4,), np.int8),
+            "off": off}
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, tree)
+    fmt = cm.meta(1)["qsave"]
+    assert fmt["w"]["enc"] == "hilo"
+    assert fmt["opt/acc"]["enc"] == "i16"
+    assert fmt["kv"]["enc"] == "raw" and fmt["off"]["enc"] == "raw"
+    rep = cm.size_report(1)
+    assert rep["ckpt_bytes_q"] < rep["ckpt_bytes_f32_dense"]
+    assert qsave.stored_bytes(fmt["w"]) == 3 * w.size
+    got, _, _ = cm.restore(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_restore_casts_to_target_dtype_under_mesh(tmp_path):
+    """Leaf dtypes follow the TARGET tree on the mesh placement path too
+    (a f64-saved leaf restores as the f32 the step function wants)."""
+    from jax.sharding import PartitionSpec as P
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, {"w": np.arange(8, dtype=np.float64)})
+    target = {"w": jax.ShapeDtypeStruct((8,), jnp.float32)}
+    mesh = jax.make_mesh((1,), ("data",))
+    got, _, _ = cm.restore(target, mesh=mesh, pspec_tree={"w": P("data")})
+    assert got["w"].dtype == jnp.float32
+    got2, _, _ = cm.restore(target)             # host path, same rule
+    assert got2["w"].dtype == jnp.float32
+
+
+def test_restore_array_set_mismatch(tmp_path):
+    """A target tree whose keys differ from the checkpoint raises a clear
+    ValueError naming the missing/unexpected arrays, not a KeyError deep
+    in npz."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, {"w": np.zeros(3), "b": np.zeros(2)})
+    with pytest.raises(ValueError, match="extra"):
+        cm.restore({"w": np.zeros(3), "extra": np.zeros(1)})
+    with pytest.raises(ValueError, match="b"):
+        cm.restore({"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="shape"):
+        cm.restore({"w": np.zeros(4), "b": np.zeros(2)})
+
+
+def test_tmp_sweep_and_failed_publish(tmp_path):
+    """A writer killed mid-save leaves tmp-<step> but never publishes; the
+    failure surfaces at wait(), the latest checkpoint is unchanged, and the
+    next manager construction sweeps the staging dir."""
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    t = _tree()
+    cm.save(1, t)
+    cm.wait()
+    cm._fail_next_write = True                  # chaos hook: die pre-publish
+    cm.save(2, t)
+    with pytest.raises(RuntimeError, match="injected"):
+        cm.wait()
+    assert cm.latest_step() == 1                # step 2 never published
+    assert os.path.isdir(tmp_path / "tmp-2")
+    cm2 = CheckpointManager(str(tmp_path))
+    assert not os.path.isdir(tmp_path / "tmp-2")
+    assert cm2.latest_step() == 1
+
+
+def test_unpacked_mode_back_compat(tmp_path):
+    """packed=False writes dense npz (no qsave fmt) and restore handles
+    checkpoints without packing metadata."""
+    cm = CheckpointManager(str(tmp_path), async_write=False, packed=False)
+    t = _tree()
+    cm.save(1, t)
+    assert "qsave" not in cm.meta(1)
+    got, _, _ = cm.restore(t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_export_int8_report_ratio():
+    """The lossy serving export packs float leaves to ~1 byte/elem (>=3x
+    vs dense f32) while integer leaves pass through."""
+    from repro.checkpoint import qsave
+    from repro.checkpoint.manager import _flatten_with_paths
+
+    tree = {"w": jnp.asarray(np.random.default_rng(0)
+                             .standard_normal((64, 64)), jnp.float32),
+            "step": jnp.int32(3)}
+    ex = qsave.export_int8(tree)
+    _, fmt = qsave.pack_tree(_flatten_with_paths(ex))
+    rep = qsave.report(fmt)
+    assert rep["ratio"] >= 3.0, rep
+
+
 def test_qtensor_leaves_roundtrip(tmp_path):
     """QTensor pytrees (int8 KV caches, wire payloads) checkpoint and
     restore through the named-path keys (GetAttrKey -> 'cache/k/data')."""

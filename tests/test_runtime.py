@@ -21,6 +21,26 @@ def test_watchdog_flags_stragglers():
     assert wd.flags == [6]
 
 
+def test_watchdog_window_bounds_history_and_reset():
+    """The timing history is a rolling window (long runs don't grow memory
+    or freeze the median on ancient steps) and reset() clears the stats
+    for a legitimately-changed baseline (elastic reshard)."""
+    wd = StepWatchdog(factor=3.0, warmup=3, window=8)
+    for s in range(100):
+        wd.observe(s, 0.1)
+    assert len(wd.times) == 8
+    # the median follows the window: once half the window runs at the new
+    # 1.0s pace it becomes the baseline and stops flagging — an unbounded
+    # history would keep judging against the ancient 0.1s median forever
+    for s in range(100, 108):
+        wd.observe(s, 1.0)
+    assert not wd.observe(108, 1.0)
+    assert wd.flags == [100, 101, 102, 103]
+    wd.reset()
+    assert wd.times == [] and wd.flags == []
+    assert not wd.observe(0, 50.0)          # back in warmup after reset
+
+
 def test_runner_restores_after_injected_failure(tmp_path):
     """Crash at step 7 -> restore from step 5 checkpoint -> same final state
     as an uninterrupted run (deterministic resume)."""
