@@ -13,6 +13,8 @@ Three quantizers (paper Eq. 6/7/8/17):
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
@@ -28,8 +30,43 @@ def d(k: int) -> float:
     return 2.0 ** (1 - k)
 
 
+# Trace-time amax synchronization for manual tensor parallelism: inside a
+# shard_map body every amax-derived scale must be GLOBAL (the tp=1 value),
+# or per-rank quantization grids would diverge and sharded outputs would
+# stop being exact slices of the single-device computation.  The sync is a
+# scalar pmax — a float collective, but a SCALAR one, which the sharded
+# wire contract explicitly permits (DESIGN.md §9/§12).
+_AMAX_SYNC_AXIS: str | None = None
+
+
+@contextlib.contextmanager
+def amax_sync(axis: str | None):
+    """Within this context, amax() pmaxes its result over `axis`.
+
+    Applied at TRACE time: wrap the shard_map body so every quantizer scale
+    computed inside agrees across model ranks.  pmax over ranks that hold
+    identical replicated values (or over a size-1 axis at tp=1) is the
+    identity, so the contract costs nothing when nothing is sharded.
+    """
+    global _AMAX_SYNC_AXIS
+    from repro.kernels import ref as _kref   # core -> kernels only
+    prev = _AMAX_SYNC_AXIS
+    _AMAX_SYNC_AXIS = axis
+    # the fused oracles run their own in-body GridQuantizer decompositions
+    # (kernels/ref.py); their amax must obey the same global-scale contract
+    prev_k = _kref.set_amax_sync_axis(axis)
+    try:
+        yield
+    finally:
+        _AMAX_SYNC_AXIS = prev
+        _kref.set_amax_sync_axis(prev_k)
+
+
 def amax(x: Array) -> Array:
-    return jnp.max(jnp.abs(x))
+    m = jnp.max(jnp.abs(x))
+    if _AMAX_SYNC_AXIS is not None:
+        m = jax.lax.pmax(m, _AMAX_SYNC_AXIS)
+    return m
 
 
 def pow2_round(m: Array) -> Array:

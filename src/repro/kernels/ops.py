@@ -249,7 +249,11 @@ def paged_attention_op(q8, k_pages, v_pages, table, q_pos, t_valid,
     """
     page = k_pages.shape[1]
     fits = paged_attention_fits(q8.shape[1], table.shape[1] * page)
-    if (_on_tpu() or force_kernel) and fits:
+    # under manual TP (amax_sync active) the probability amax must pmax
+    # over the model axis — a mesh collective the Pallas kernel body cannot
+    # issue, so sharded decode stays on the (bit-identical) oracle
+    tp_sync = ref._AMAX_SYNC_AXIS is not None
+    if not tp_sync and (_on_tpu() or force_kernel) and fits:
         return paged_attention(q8, k_pages, v_pages, table, q_pos, t_valid,
                                q_scale, k_scale, v_scale, sm_scale=sm_scale,
                                k_a=k_a, interpret=not _on_tpu())
@@ -282,7 +286,10 @@ def flash_attention_op(q8, k8, v8, q_pos, k_pos, k_valid, q_scale, k_scale,
     """
     b, s, h, dh = q8.shape
     fits = flash_attention_fits(b, min(q_chunk, s), h, dh)
-    if (_on_tpu() or force_kernel) and fits:
+    # same manual-TP routing rule as paged_attention_op: in-kernel amax
+    # cannot pmax, so sharded prefill/training takes the oracle
+    tp_sync = ref._AMAX_SYNC_AXIS is not None
+    if not tp_sync and (_on_tpu() or force_kernel) and fits:
         return flash_attention(q8, k8, v8, q_pos, k_pos, k_valid, q_scale,
                                k_scale, v_scale, causal=causal,
                                sm_scale=sm_scale, q_chunk=q_chunk,

@@ -139,11 +139,35 @@ def _pow2_ceil(m):
     return jnp.where(m > 0, jnp.exp2(jnp.ceil(jnp.log2(safe))), 1.0)
 
 
+# Mirror of core.qfuncs._AMAX_SYNC_AXIS, set by qfuncs.amax_sync (the
+# import direction is core -> kernels, so the context pushes the axis down
+# here rather than kernels reading it from core).  Inside a manual-TP
+# shard_map body the oracles' in-kernel GridQuantizer decompositions span
+# only the local head shard; without the pmax their pow2_ceil(amax) scale
+# can land one power of two away from the tp=1 value whenever the global
+# amax lives on another rank's heads — a rare, input-dependent bit
+# divergence (the §12 exactness contract requires every scale be global).
+_AMAX_SYNC_AXIS: str | None = None
+
+
+def set_amax_sync_axis(axis):
+    """Set the trace-time amax pmax axis; returns the previous value."""
+    global _AMAX_SYNC_AXIS
+    prev = _AMAX_SYNC_AXIS
+    _AMAX_SYNC_AXIS = axis
+    return prev
+
+
 def _grid_decompose(x: jax.Array, k: int):
     """GridQuantizer decomposition (core/qtensor.py): pow2_ceil(amax) scale
     with a 2^-24 floor, payload clip(round(x/step), +-(2^(k-1)-1)) int8.
-    Returns (payload, step).  Bit-identical to _decompose + quantize_ref."""
-    s = jnp.maximum(_pow2_ceil(jnp.max(jnp.abs(x))), 2.0 ** -24)
+    Returns (payload, step).  Bit-identical to _decompose + quantize_ref.
+    Under amax_sync the amax is pmax'ed over the model axis — same scalar
+    collective contract as core.qfuncs.amax."""
+    m = jnp.max(jnp.abs(x))
+    if _AMAX_SYNC_AXIS is not None:
+        m = jax.lax.pmax(m, _AMAX_SYNC_AXIS)
+    s = jnp.maximum(_pow2_ceil(m), 2.0 ** -24)
     step = s * 2.0 ** (1 - k)
     lim = 2.0 ** (k - 1) - 1.0
     p8 = jnp.clip(jnp.round(x * (jnp.float32(1.0) / step)), -lim,

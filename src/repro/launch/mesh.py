@@ -22,6 +22,21 @@ def make_cpu_mesh(n_data: int = 1, n_model: int = 1, pod: int = 0):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_replica_meshes(n_replicas: int, tp: int = 1):
+    """Disjoint (1, tp) serving meshes carved from the device list — one per
+    data-parallel serving replica, so replicas never contend for a device."""
+    import numpy as np
+    devs = jax.devices()
+    need = n_replicas * tp
+    if len(devs) < need:
+        raise ValueError(
+            f"{n_replicas} replicas x tp={tp} needs {need} devices, "
+            f"have {len(devs)}")
+    from jax.sharding import Mesh
+    return [Mesh(np.array(devs[i * tp:(i + 1) * tp]).reshape(1, tp),
+                 ("data", "model")) for i in range(n_replicas)]
+
+
 def mesh_axes(mesh):
     """(dp_axes, tp_axis) convention used throughout the framework."""
     names = mesh.axis_names

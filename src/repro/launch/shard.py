@@ -8,10 +8,12 @@ full-manual shard_map over a ("data", "model") mesh:
           of the algorithm); each device runs n_shards/dp of them and
           gradient sync rides the integer wire (runtime/compress.py).
   model — manual tensor parallelism.  Transformer families shard attention
-          heads / FFN features / experts; params arrive pre-sliced via the
-          specs below and the Megatron tp_enter/tp_exit pair in
-          models/layers.py carries the boundary psums.  Families without a
-          manual-TP implementation are DP-only (build_model raises).
+          heads / FFN features / experts; the recurrent families shard
+          mamba1's d_inner channels and mamba2's SSD heads (DESIGN.md §12).
+          Params arrive pre-sliced via the specs below and the Megatron
+          tp_enter/tp_exit pair in models/layers.py carries the boundary
+          reductions.  Families without a manual-TP implementation are
+          DP-only (build_model raises).
 
 This module owns the per-family sharding RULES: which parameter axes live
 on the model axis, how optimizer state mirrors them (including the ZeRO-1
@@ -27,15 +29,29 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 
-# Transformer-family leaves sharded over the model axis, by parameter name:
-# value = the axis (WITHIN the stacked-layers leaf) that carries the shard.
+# Leaves sharded over the model axis, by parameter name: value = the axis
+# (negative, FROM THE END of the leaf) that carries the shard.  Negative
+# indexing makes one rule serve stacked (L, ...) per-layer leaves, stacked
+# (L, e, ...) expert leaves and UNstacked shared-block leaves (the hybrid
+# family reuses one attention block, so its wq is 2-D) alike.
 # Column-sharded (output features / heads / experts): wq wk wv w_gate w_up
 # wg wu; row-sharded (input features, partial outputs psum'ed by tp_exit):
 # wo w_down wd.
 _TP_SHARDED_AXIS = {
-    "wq": 2, "wk": 2, "wv": 2, "w_gate": 2, "w_up": 2,   # (L, d, f_tp)
-    "wo": 1, "w_down": 1,                                # (L, f_tp, d)
-    "wg": 1, "wu": 1, "wd": 1,                           # (L, e_tp, ...)
+    "wq": -1, "wk": -1, "wv": -1, "w_gate": -1, "w_up": -1,  # (.., d, f_tp)
+    "wo": -2, "w_down": -2,                                  # (.., f_tp, d)
+    "wg": -3, "wu": -3, "wd": -3,                            # (L, e_tp, ..)
+}
+
+# Per-family extensions for the recurrent blocks (DESIGN.md §12): mamba1
+# splits the d_inner channel axis (x_proj/out_proj row-sharded, dt_proj
+# column-sharded, per-channel vectors sliced); mamba2 splits SSD heads and
+# keeps every channel-mixing projection replicated.  Names absent here and
+# in the base table stay replicated.
+_TP_FAMILY_AXIS = {
+    "ssm": {"x_proj": -2, "dt_proj": -1, "dt_bias": -1, "A_log": -2,
+            "D_skip": -1, "out_proj": -2},
+    "hybrid": {"dt_proj": -1, "dt_bias": -1, "A_log": -1, "D_skip": -1},
 }
 
 
@@ -62,14 +78,51 @@ def tp_param_specs(model, params):
     if getattr(model, "tp_size", 1) == 1:
         return jax.tree.map(lambda _: P(), params)
 
+    table = dict(_TP_SHARDED_AXIS)
+    fam = getattr(getattr(model, "a", None), "family", "")
+    table.update(_TP_FAMILY_AXIS.get(fam, {}))
+
     def spec(path, leaf):
-        ax = _TP_SHARDED_AXIS.get(_leaf_name(path))
+        ax = table.get(_leaf_name(path))
+        if ax is None:
+            return P()
+        ax = ax % leaf.ndim
+        return P(*((MODEL_AXIS if i == ax else None)
+                   for i in range(leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def decode_slot_specs(model, slots):
+    """PartitionSpec dict for the serving engine's dense decode slots: the
+    model's decode_state_spec()["tp_axes"] names the stacked-slot axis each
+    key shards over the model axis (recurrent channel/head state); every
+    other key — positions, conv windows — is replicated."""
+    if getattr(model, "tp_size", 1) == 1:
+        return {k: P() for k in slots}
+    tp_axes = model.decode_state_spec().get("tp_axes", {})
+
+    def spec(k, leaf):
+        ax = tp_axes.get(k)
         if ax is None:
             return P()
         return P(*((MODEL_AXIS if i == ax else None)
                    for i in range(leaf.ndim)))
 
-    return jax.tree_util.tree_map_with_path(spec, params)
+    return {k: spec(k, v) for k, v in slots.items()}
+
+
+def page_pool_spec(model):
+    """Spec for an int8 KV page array (kv_layers, n_pages, page, n_kv, dh):
+    KV heads column-shard over the model axis (each rank's pages hold its
+    local n_kv/tp heads — the page-shard layout of DESIGN.md §12).
+    Pageless families (pure SSM) get the replicated spec for their dummy
+    (0,) placeholder arrays."""
+    if getattr(model, "tp_size", 1) == 1:
+        return P()
+    if model.decode_state_spec()["kv_layers"] == 0:
+        return P()
+    return P(None, None, None, MODEL_AXIS, None)
 
 
 def batch_specs(batch):

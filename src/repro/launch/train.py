@@ -370,6 +370,29 @@ def make_prefill_token_step(model, k_scale=None, v_scale=None):
     return step
 
 
+def tp_serving_wrap(fn, mesh, in_specs, out_specs):
+    """Manual-TP wrapper for a serving step function (DESIGN.md §12):
+    shard_map over the same ("data", "model") mesh as training, with the
+    sharded-decode contexts baked into the body — amax_sync (every
+    quantizer scale becomes the global tp=1 value via a scalar pmax) and
+    tp_int_wire (tp_exit reductions ride integer all_gathers).  The
+    contexts are entered inside the body, so every retrace re-applies
+    them; at trace time they cost nothing when tp == 1."""
+    from repro.compat import SHARD_MAP_KW as _SM_KW
+    from repro.compat import shard_map as _shard_map
+    from repro.core import qfuncs as qf
+    from repro.models import layers as mlayers
+
+    from . import shard as S
+
+    def body(*args):
+        with qf.amax_sync(S.MODEL_AXIS), mlayers.tp_int_wire():
+            return fn(*args)
+
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **_SM_KW)
+
+
 def make_prefill(model, shape_name):
     from repro.configs.base import LM_SHAPES
     s, b, _ = LM_SHAPES[shape_name]

@@ -23,13 +23,24 @@ from . import ssm as S
 Array = jax.Array
 
 
-def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
-    """One shared attention+MLP block (pre-norm, GQA, SwiGLU)."""
+def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None, tp_size=1,
+                 tp_axis="model"):
+    """One shared attention+MLP block (pre-norm, GQA, SwiGLU).
+
+    Manual TP (tp_size > 1): the Megatron split — wq/wk/wv column-sharded
+    (local heads), wo row-sharded (tp_exit rejoins), w_gate/w_up column- and
+    w_down row-sharded.  KV pages hold the LOCAL n_kv/tp heads; attention
+    (softmax included) is per-head, so every rank's output heads are exact
+    slices of the tp=1 computation."""
     b, s, d = x.shape
+    hl, kvl = acfg.n_heads // tp_size, acfg.n_kv // tp_size
+    tp = tp_size > 1
     h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln1"]))
-    qh = qdense(cfg, h, p["wq"]).reshape(b, s, acfg.n_heads, acfg.dh)
-    kh = qdense(cfg, h, p["wk"]).reshape(b, s, acfg.n_kv, acfg.dh)
-    vh = qdense(cfg, h, p["wv"]).reshape(b, s, acfg.n_kv, acfg.dh)
+    if tp:
+        h = L.tp_enter(tp_axis, h)
+    qh = qdense(cfg, h, p["wq"]).reshape(b, s, hl, acfg.dh)
+    kh = qdense(cfg, h, p["wk"]).reshape(b, s, kvl, acfg.dh)
+    vh = qdense(cfg, h, p["wv"]).reshape(b, s, kvl, acfg.dh)
     new_cache = None
     if mode == "train":
         qh = L.rope(qh, pos, acfg.rope_theta)
@@ -86,9 +97,17 @@ def _attn_shared(cfg, acfg, p, x, pos, mode, cache=None):
                                    L.kv_qtensor(v8, vs), q_pos=pvec,
                                    t_valid=pvec.max() + 1)
             new_cache = (k8, v8)
-    x = x + qdense(cfg, o.reshape(b, s, -1), p["wo"])
+    o_proj = qdense(cfg, o.reshape(b, s, -1), p["wo"])
+    if tp:
+        o_proj = L.tp_exit(tp_axis, o_proj)
+    x = x + o_proj
     h2 = qact(cfg, "none", qrmsnorm(cfg, x, p["ln2"]))
-    x = x + L.swiglu(cfg, h2, p["w_gate"], p["w_up"], p["w_down"], acfg.act)
+    if tp:
+        h2 = L.tp_enter(tp_axis, h2)
+    mlp = L.swiglu(cfg, h2, p["w_gate"], p["w_up"], p["w_down"], acfg.act)
+    if tp:
+        mlp = L.tp_exit(tp_axis, mlp)
+    x = x + mlp
     return x, new_cache
 
 
@@ -98,11 +117,17 @@ class Zamba2:
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
         self.tp_size = tp_size
-        if tp_size != 1:
-            raise ValueError(
-                f"{type(self).__name__} supports DP-only sharding "
-                f"(manual TP shards attention heads / FFN / experts; "
-                f"got tp_size={tp_size})")
+        if tp_size > 1:
+            hm = acfg.d_inner // acfg.headdim
+            bad = [f"{k}={v}" for k, v in
+                   (("n_heads", acfg.n_heads), ("n_kv", acfg.n_kv),
+                    ("d_ff", acfg.d_ff), ("ssd_heads", hm))
+                   if v % tp_size]
+            if bad:
+                raise ValueError(
+                    f"manual TP shards attention heads / FFN features / "
+                    f"SSD heads: {', '.join(bad)} not divisible by "
+                    f"tp={tp_size}")
         ae = acfg.attn_every
         self.n_groups = acfg.n_layers // ae
         self.tail = acfg.n_layers - self.n_groups * ae
@@ -173,11 +198,13 @@ class Zamba2:
         shared = params["shared"]
         emit = cache == "emit"
 
+        tpk = {"tp_size": self.tp_size, "tp_axis": self.tp}
+
         def mamba_scan(x, group_params, states):
             if mode == "train":
                 def mbody(h, lp):
                     h = L.constrain(self.mesh, h, P(self.dp, None, None))
-                    h2, st = S.mamba2_block(q, a, lp, h, "train")
+                    h2, st = S.mamba2_block(q, a, lp, h, "train", **tpk)
                     return h2, st
                 mbody = L.maybe_remat(a, mbody)
                 return L.lscan(a, mbody, x, group_params)
@@ -185,7 +212,7 @@ class Zamba2:
             def mbody(h, xs):
                 lp, sc, sh = xs
                 h2, ns = S.mamba2_block(q, a, lp, h, mode,
-                                        {"conv": sc, "h": sh})
+                                        {"conv": sc, "h": sh}, **tpk)
                 return h2, (ns["conv"], ns["h"])
             return L.lscan(a, mbody, x,
                            (group_params, states["conv"], states["h"]))
@@ -195,14 +222,14 @@ class Zamba2:
                 gp = xs
                 h, sts = mamba_scan(h, gp, None)
                 h, kv = _attn_shared(q, a, shared, h, pos, "train",
-                                     "emit" if emit else None)
+                                     "emit" if emit else None, **tpk)
                 return h, (sts, kv)
             gbody = L.maybe_remat(a, gbody)
             x, (g_states, g_kv) = L.lscan(a, gbody, x, head)
             t_states = None
             if self.tail:
                 def tbody(h, lp):
-                    h2, st = S.mamba2_block(q, a, lp, h, "train")
+                    h2, st = S.mamba2_block(q, a, lp, h, "train", **tpk)
                     return h2, st
                 tbody = L.maybe_remat(a, tbody)
                 x, t_states = L.lscan(a, tbody, x, tail)
@@ -222,7 +249,8 @@ class Zamba2:
             else:
                 lc = {"k": ck, "v": cv, "k_scale": cache["k_scale"][0],
                       "v_scale": cache["v_scale"][0]}
-            h, (nk, nv) = _attn_shared(q, a, shared, h, pos, mode, lc)
+            h, (nk, nv) = _attn_shared(q, a, shared, h, pos, mode, lc,
+                                       **tpk)
             return h, (nc, nh, nk, nv)
 
         g, ae = self.n_groups, a.attn_every
@@ -239,7 +267,7 @@ class Zamba2:
             def tbody(h, xs):
                 lp, sc, sh = xs
                 h2, ns = S.mamba2_block(q, a, lp, h, mode,
-                                        {"conv": sc, "h": sh})
+                                        {"conv": sc, "h": sh}, **tpk)
                 return h2, (ns["conv"], ns["h"])
             x, (tc, th) = L.lscan(
                 a, tbody, x, (tail, cache["m_conv"][g * ae:],
@@ -322,9 +350,13 @@ class Zamba2:
     # (one logical page spans all n_groups applications of the block).
 
     def decode_state_spec(self):
+        # tp_axes: stacked-slot axes sharded over the model axis under
+        # manual TP (m_h is (L,B,hm,N,pdim) with SSD heads sharded; the
+        # conv window is replicated).
         a = self.a
         return {"kv_layers": self.n_groups, "n_kv": a.n_kv, "dh": a.dh,
-                "dense_axes": {"m_conv": 1, "m_h": 1, "pos": 0}}
+                "dense_axes": {"m_conv": 1, "m_h": 1, "pos": 0},
+                "tp_axes": {"m_h": 2}}
 
     def init_slots(self, n_lanes: int):
         a = self.a

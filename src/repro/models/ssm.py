@@ -117,12 +117,26 @@ def _sscan_chunked(a, b, c_coef, h0, chunk, unroll=False):
     return y[:, :s], h_last
 
 
-def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
+def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
+                 tp_size: int = 1, tp_axis: str = "model"):
     """x: (B,S,D).  mode 'train' (state ignored), 'chunk' (train-style
     parallel scan seeded from `state` — the chunked-prefill page step), or
-    'decode' (S==1, state carried per token)."""
+    'decode' (S==1, state carried per token).
+
+    Manual TP (tp_size > 1, inside a shard_map body): the block splits on
+    the d_inner channel axis.  ln/in_proj/conv stay REPLICATED (the conv
+    mixes nothing across channels but its window state is cheapest shared);
+    each rank then slices its d_inner/tp channel block and runs the scan
+    locally — x_proj/out_proj are row-sharded (tp_exit rejoins), dt_proj is
+    column-sharded, and dt_bias/A_log/D_skip are per-channel slices.  The
+    carried `h` state is sharded on its channel axis; `conv` is replicated.
+    Bit-exact vs tp=1 because every quantizer scale is global (amax_sync)
+    and every weight scale is fixed (DESIGN.md §12).
+    """
     bsz, s, d = x.shape
     di, n = acfg.d_inner, acfg.ssm_state
+    dil = di // tp_size                              # local channel count
+    tp = tp_size > 1
     r = max(d // 16, 1)
     h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln"]))
     xz = qdense(cfg, h, p["in_proj"])
@@ -140,12 +154,20 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
         wq = qt_carrier(qweight(cfg, p["conv_w"]))
         xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
         new_conv = window[:, 1:]
+    if tp:
+        off = lax.axis_index(tp_axis) * dil
+        xc = lax.dynamic_slice_in_dim(L.tp_enter(tp_axis, xc), off, dil, -1)
+        z = lax.dynamic_slice_in_dim(L.tp_enter(tp_axis, z), off, dil, -1)
     xc = qact(cfg, "silu", xc)
 
     meta = qdense(cfg, xc, p["x_proj"])
+    if tp:
+        meta = L.tp_exit(tp_axis, meta)              # partial row outputs
     dtr, bs, cs = jnp.split(meta, [r, r + n], axis=-1)
-    dt = jax.nn.softplus(qdense(cfg, qact(cfg, "none", dtr), p["dt_proj"])
-                         + p["dt_bias"])
+    dtr = qact(cfg, "none", dtr)
+    if tp:
+        dtr = L.tp_enter(tp_axis, dtr)               # feeds sharded dt_proj
+    dt = jax.nn.softplus(qdense(cfg, dtr, p["dt_proj"]) + p["dt_bias"])
     dt = qbn_param(cfg, dt, cfg.k_bn)                # 16-bit grid (DESIGN §3)
     bs = qbn_param(cfg, bs, cfg.k_bn)
     cs = qbn_param(cfg, cs, cfg.k_bn)
@@ -156,7 +178,7 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
         a = jnp.exp(dt[..., None] * a_mat).astype(sdt)   # (B,S,di,N)
         b = ((dt * xc)[..., None] * bs[:, :, None, :]).astype(sdt)
         h0 = (state["h"].astype(sdt) if mode == "chunk"
-              else jnp.zeros((bsz, di, n), sdt))
+              else jnp.zeros((bsz, dil, n), sdt))
         y, h_last = _sscan_chunked(a, b, cs.astype(sdt), h0,
                                    chunk=acfg.scan_chunk,
                                    unroll=acfg.unroll_scan_chunks)
@@ -180,6 +202,8 @@ def mamba1_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None):
     y = y + p["D_skip"] * xc
     y = y * qact(cfg, "silu", z)
     out = qdense(cfg, qact(cfg, "none", y), p["out_proj"])
+    if tp:
+        out = L.tp_exit(tp_axis, out)                # partial row outputs
     return x + out, new_state
 
 
@@ -228,11 +252,23 @@ def _segsum_decay(alog):
 
 
 def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
-                 chunk: int | None = None):
+                 chunk: int | None = None, tp_size: int = 1,
+                 tp_axis: str = "model"):
+    """Manual TP (tp_size > 1): splits on SSD heads.  Everything that mixes
+    across d_inner (in_proj/conv/bc_proj/ssm_norm/out_proj) stays
+    REPLICATED; each rank slices its hm/tp contiguous head block (heads are
+    contiguous pdim channel runs, so the channel slice is rank*di/tp), runs
+    the recurrence locally (dt_proj column-sharded; dt_bias/A_log/D_skip
+    per-head slices), and one integer-payload gather (tp_gather_lastdim)
+    rejoins y before the replicated norm/gate/out tail.  Carried `h` state
+    is head-sharded; `conv` is replicated."""
     bsz, s, d = x.shape
     di, n = acfg.d_inner, acfg.ssm_state
     pdim = acfg.headdim
     hm = di // pdim
+    hml = hm // tp_size                                # local head count
+    dil = hml * pdim                                   # local channel count
+    tp = tp_size > 1
 
     h = qact(cfg, "none", qrmsnorm(cfg, x, p["ln"]))
     xz = qdense(cfg, h, p["in_proj"])
@@ -241,18 +277,23 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
     bs, cs = jnp.split(bc, 2, axis=-1)                 # (B,S,N) each
     bs = qbn_param(cfg, bs, cfg.k_bn)
     cs = qbn_param(cfg, cs, cfg.k_bn)
-    dt = jax.nn.softplus(qdense(cfg, h, p["dt_proj"]) + p["dt_bias"])
-    dt = qbn_param(cfg, dt, cfg.k_bn)                  # (B,S,Hm)
-    a_neg = -jnp.exp(p["A_log"])                       # (Hm,)
+    hd = L.tp_enter(tp_axis, h) if tp else h           # feeds sharded dt_proj
+    dt = jax.nn.softplus(qdense(cfg, hd, p["dt_proj"]) + p["dt_bias"])
+    dt = qbn_param(cfg, dt, cfg.k_bn)                  # (B,S,Hm/tp)
+    a_neg = -jnp.exp(p["A_log"])                       # (Hm/tp,)
 
     new_state = None
     if chunk is None:
         chunk = acfg.scan_chunk
     if mode in ("train", "chunk"):
-        xc = qact(cfg, "silu", causal_conv1d(
-            cfg, xi, p["conv_w"], p["conv_b"],
-            init=state["conv"] if mode == "chunk" else None))
-        xh = qt_carrier(xc).reshape(bsz, s, hm, pdim)
+        xc = causal_conv1d(cfg, xi, p["conv_w"], p["conv_b"],
+                           init=state["conv"] if mode == "chunk" else None)
+        if tp:
+            off = lax.axis_index(tp_axis) * dil
+            xc = lax.dynamic_slice_in_dim(L.tp_enter(tp_axis, xc),
+                                          off, dil, -1)
+        xc = qact(cfg, "silu", xc)
+        xh = qt_carrier(xc).reshape(bsz, s, hml, pdim)
         alog = dt * a_neg                              # (B,S,Hm) log decays
         chunk = min(chunk, s)
         pad = -s % chunk
@@ -264,9 +305,9 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
         else:
             dt_, alog_, bs_, cs_ = dt, alog, bs, cs
         nc = (s + pad) // chunk
-        xhc = xh.reshape(bsz, nc, chunk, hm, pdim).transpose(1, 0, 2, 3, 4)
-        dtc = dt_.reshape(bsz, nc, chunk, hm).transpose(1, 0, 2, 3)
-        alc = alog_.reshape(bsz, nc, chunk, hm).transpose(1, 0, 2, 3)
+        xhc = xh.reshape(bsz, nc, chunk, hml, pdim).transpose(1, 0, 2, 3, 4)
+        dtc = dt_.reshape(bsz, nc, chunk, hml).transpose(1, 0, 2, 3)
+        alc = alog_.reshape(bsz, nc, chunk, hml).transpose(1, 0, 2, 3)
         bsc = bs_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
         csc = cs_.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
 
@@ -293,11 +334,11 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
             return s_new, y_in + y_x
 
         s0 = (state["h"] if mode == "chunk"
-              else jnp.zeros((bsz, hm, n, pdim), jnp.float32))
+              else jnp.zeros((bsz, hml, n, pdim), jnp.float32))
         s_last, ys = lax.scan(body, s0, (xhc, dtc, alc, bsc, csc),
                               unroll=(True if acfg.unroll_scan_chunks
                                       else 1))
-        y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, hm, pdim)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * chunk, hml, pdim)
         y = y[:, :s]
         xh = xh[:, :s]
         kc = acfg.d_conv - 1
@@ -313,8 +354,12 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
         window = jnp.concatenate([conv_s, xi], axis=1)
         wq = qt_carrier(qweight(cfg, p["conv_w"]))
         xc = jnp.einsum("kc,bkc->bc", wq, window)[:, None] + p["conv_b"]
+        if tp:
+            off = lax.axis_index(tp_axis) * dil
+            xc = lax.dynamic_slice_in_dim(L.tp_enter(tp_axis, xc),
+                                          off, dil, -1)
         xc = qact(cfg, "silu", xc)
-        xh = xc.reshape(bsz, 1, hm, pdim)
+        xh = qt_carrier(xc).reshape(bsz, 1, hml, pdim)
         ss = state["h"]                                # (B,Hm,N,P)
         dt1 = dt[:, 0]                                 # (B,Hm)
         dec = jnp.exp(dt1 * a_neg)[:, :, None, None]
@@ -324,7 +369,9 @@ def mamba2_block(cfg: QConfig, acfg: ArchConfig, p, x, mode, state=None,
         new_state = {"conv": window[:, 1:], "h": ss}
 
     y = y + p["D_skip"][:, None] * xh
-    y = y.reshape(bsz, -1, di)
+    y = y.reshape(bsz, -1, dil)
+    if tp:
+        y = L.tp_gather_lastdim(tp_axis, y)            # rejoin head shards
     y = qrmsnorm(cfg, y, p["ssm_norm"]) * qact(cfg, "silu", z)
     out = qdense(cfg, qact(cfg, "none", y), p["out_proj"])
     return x + out, new_state

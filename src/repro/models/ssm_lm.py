@@ -18,11 +18,10 @@ class SSMLM:
         self.a, self.q = acfg, qcfg
         self.mesh, self.dp, self.tp = mesh, dp_axes, tp_axis
         self.tp_size = tp_size
-        if tp_size != 1:
+        if tp_size > 1 and acfg.d_inner % tp_size:
             raise ValueError(
-                f"{type(self).__name__} supports DP-only sharding "
-                f"(manual TP shards attention heads / FFN / experts; "
-                f"got tp_size={tp_size})")
+                f"manual TP shards the d_inner channel axis: "
+                f"d_inner={acfg.d_inner} % tp={tp_size} != 0")
 
     def init(self, key):
         a = self.a
@@ -56,7 +55,9 @@ class SSMLM:
         if mode == "train":
             def body(h, lp):
                 h = L.constrain(self.mesh, h, P(self.dp, None, None))
-                h2, st = S.mamba1_block(self.q, self.a, lp, h, "train")
+                h2, st = S.mamba1_block(self.q, self.a, lp, h, "train",
+                                        tp_size=self.tp_size,
+                                        tp_axis=self.tp)
                 return h2, st
             body = L.maybe_remat(self.a, body)
             x, states = L.lscan(self.a, body, x, params["layers"])
@@ -65,7 +66,8 @@ class SSMLM:
         def body(h, xs):
             lp, st_c, st_h = xs
             h2, ns = S.mamba1_block(self.q, self.a, lp, h, "decode",
-                                    {"conv": st_c, "h": st_h})
+                                    {"conv": st_c, "h": st_h},
+                                    tp_size=self.tp_size, tp_axis=self.tp)
             return h2, (ns["conv"], ns["h"])
         x, (nc, nh) = L.lscan(self.a, body, x,
                               (params["layers"], state["conv"], state["h"]))
@@ -108,8 +110,12 @@ class SSMLM:
     # state sits in dense per-lane slots behind the same engine interface.
 
     def decode_state_spec(self):
+        # tp_axes: axis of each stacked dense slot sharded over the model
+        # axis under manual TP (the mamba1 channel split: h is (L,B,di,N)
+        # with di sharded; the conv window is replicated).
         return {"kv_layers": 0, "n_kv": 0, "dh": 0,
-                "dense_axes": {"conv": 1, "h": 1, "pos": 0}}
+                "dense_axes": {"conv": 1, "h": 1, "pos": 0},
+                "tp_axes": {"h": 2}}
 
     def init_slots(self, n_lanes: int):
         return self.init_state(n_lanes)
@@ -138,7 +144,8 @@ class SSMLM:
         def body(h, xs):
             lp, st_c, st_h = xs
             h2, ns = S.mamba1_block(self.q, self.a, lp, h, "chunk",
-                                    {"conv": st_c, "h": st_h})
+                                    {"conv": st_c, "h": st_h},
+                                    tp_size=self.tp_size, tp_axis=self.tp)
             return h2, (ns["conv"], ns["h"])
         x, (nc, nh) = L.lscan(self.a, body, x,
                               (params["layers"], dense["conv"], dense["h"]))

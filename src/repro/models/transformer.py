@@ -320,7 +320,7 @@ class LMTransformer:
     def decode_state_spec(self):
         a = self.a
         return {"kv_layers": a.n_layers, "n_kv": a.n_kv, "dh": a.dh,
-                "dense_axes": {"pos": 0}}
+                "dense_axes": {"pos": 0}, "tp_axes": {}}
 
     def init_slots(self, n_lanes: int):
         return {"pos": jnp.zeros((n_lanes,), jnp.int32)}

@@ -10,20 +10,25 @@ Layout (DESIGN.md §7, §10):
   engine.py    — Engine: fused jit decode over padded lanes, monolithic or
                  chunked prefill, sampling, per-request metrics,
                  StepWatchdog wiring
-  api.py       — make_engine + poisson_traffic/shared_prefix_traffic/
-                 run_load/naive_serve
+  router.py    — Router: load-aware + radix-affinity placement across
+                 data-parallel replicas, kill-replica failure drains
+  api.py       — make_engine/make_sharded_engine/make_router +
+                 poisson_traffic/shared_prefix_traffic/run_load/naive_serve
 """
 from .engine import (Engine, fused_decode_active, greedy_token,
                      make_sampler)
 from .pool import PagePool
 from .radix import RadixCache
 from .scheduler import Request, RequestState, Scheduler
-from .api import (make_engine, naive_serve, poisson_traffic, run_load,
+from .router import Router, RouterRequest
+from .api import (make_engine, make_router, make_sharded_engine,
+                  naive_serve, poisson_traffic, run_load,
                   shared_prefix_traffic)
 
 __all__ = [
     "Engine", "fused_decode_active", "greedy_token", "make_sampler",
     "PagePool", "RadixCache", "Request",
-    "RequestState", "Scheduler", "make_engine", "naive_serve",
+    "RequestState", "Router", "RouterRequest", "Scheduler",
+    "make_engine", "make_router", "make_sharded_engine", "naive_serve",
     "poisson_traffic", "run_load", "shared_prefix_traffic",
 ]

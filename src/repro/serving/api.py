@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import Engine, greedy_token
+from .router import Router
 
 
 def make_engine(arch: str, *, mode: str = "native", preset_name: str = "full8",
@@ -46,6 +47,58 @@ def make_engine(arch: str, *, mode: str = "native", preset_name: str = "full8",
                         .replace(fuse_kernels=fuse_kernels))
     params = model.init(jax.random.PRNGKey(seed))
     return Engine(model, params, **engine_kw)
+
+
+def make_sharded_engine(arch: str, *, tp: int = 1, mesh=None,
+                        mode: str = "native", preset_name: str = "full8",
+                        reduced: bool = True, seed: int = 0,
+                        fuse_kernels: bool = True, **engine_kw) -> Engine:
+    """`make_engine` with manual tensor parallelism: the model builds with
+    `tp_size=tp` on a (1, tp) ("data", "model") mesh (constructed here if
+    not supplied) and the engine runs its decode / chunked-prefill steps
+    under shard_map with int8 KV pages head-sharded per rank (DESIGN.md
+    §12).  tp > 1 requires chunked prefill — forced here."""
+    from repro.configs import get
+    from repro.core import preset
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.models import build_model
+
+    acfg = get(arch)
+    if reduced:
+        acfg = acfg.reduced()
+    if tp > 1:
+        if mesh is None:
+            mesh = make_cpu_mesh(1, tp)
+        engine_kw.setdefault("prefill_mode", "chunked")
+        engine_kw["mesh"] = mesh
+    # manual TP: the model builds WITHOUT a mesh (same as the sharded train
+    # step) — shard_map in the engine binds the axis names
+    model = build_model(acfg, preset(preset_name, mode)
+                        .replace(fuse_kernels=fuse_kernels), tp_size=tp)
+    params = model.init(jax.random.PRNGKey(seed))
+    return Engine(model, params, **engine_kw)
+
+
+def make_router(arch: str, *, replicas: int = 2, tp: int = 1,
+                mode: str = "native", preset_name: str = "full8",
+                reduced: bool = True, seed: int = 0,
+                fuse_kernels: bool = True, **engine_kw) -> Router:
+    """Build a `replicas`-way data-parallel serving tier behind a Router.
+
+    Every replica is an independent engine (own PagePool / RadixCache /
+    scheduler) built from the SAME seed, so greedy tokens are placement-
+    invariant; under tp > 1 each replica gets its own disjoint (1, tp)
+    device group.  Drives through `run_load` unchanged."""
+    from repro.launch.mesh import make_replica_meshes
+
+    meshes = (make_replica_meshes(replicas, tp) if tp > 1
+              else [None] * replicas)
+    engines = [make_sharded_engine(arch, tp=tp, mesh=m, mode=mode,
+                                   preset_name=preset_name, reduced=reduced,
+                                   seed=seed, fuse_kernels=fuse_kernels,
+                                   **engine_kw)
+               for m in meshes]
+    return Router(engines, clock=engines[0].clock)
 
 
 def poisson_traffic(rate: float, n_requests: int,

@@ -123,10 +123,12 @@ class Engine:
                  prefill_budget: int | None = None,
                  radix_cache: bool = False, max_skip: int = 4,
                  starvation_limit: int = 8,
-                 watchdog: StepWatchdog | None = None, clock=time.monotonic):
+                 watchdog: StepWatchdog | None = None, clock=time.monotonic,
+                 mesh=None):
         from repro.launch.train import (make_chunked_prefill_step,
                                         make_paged_decode_step,
-                                        make_prefill_token_step)
+                                        make_prefill_token_step,
+                                        tp_serving_wrap)
 
         self.model, self.params = model, params
         self.clock = clock
@@ -136,6 +138,24 @@ class Engine:
                 "(servable: lm / vlm / moe / ssm / hybrid)")
         spec = model.decode_state_spec()
         self.paged = spec["kv_layers"] > 0
+        self.tp_size = int(getattr(model, "tp_size", 1) or 1)
+        self.tp_mesh = mesh if self.tp_size > 1 else None
+        if self.tp_size > 1:
+            # TP decode runs the step fns under shard_map (DESIGN.md §12);
+            # only the chunked prefill path is wrapped — monolithic prefill
+            # would need a spec per prompt length, defeating the jit-stable
+            # trace the sharded engine relies on.
+            if prefill_mode != "chunked":
+                raise ValueError(
+                    "tp_size > 1 serving requires prefill_mode='chunked' "
+                    "(the sharded engine wraps only the jit-stable chunked "
+                    "traces in shard_map)")
+            if mesh is None:
+                raise ValueError(
+                    "tp_size > 1 serving needs a ('data', 'model') mesh "
+                    "passed as Engine(..., mesh=...); the model itself "
+                    "builds WITHOUT one (manual TP — shard_map binds the "
+                    "axis names, exactly like the sharded train step)")
         self.page_size = page_size
         self.max_ctx = max_ctx
         self.n_blocks = -(-max_ctx // page_size)
@@ -174,6 +194,17 @@ class Engine:
                   if self.paged else (None, None))
         self._decode_step = make_paged_decode_step(model, sampler, *scales,
                                                    key=self.key)
+        if self.tp_size > 1:
+            from jax.sharding import PartitionSpec as P
+
+            import repro.launch.shard as S
+            pspecs = S.tp_param_specs(model, params)
+            slot_specs = S.decode_slot_specs(model, self.slots)
+            pg = S.page_pool_spec(model) if self.paged else P()
+            self._decode_step = tp_serving_wrap(
+                self._decode_step, mesh,
+                in_specs=(pspecs, slot_specs, pg, pg, P(), P(), P()),
+                out_specs=(slot_specs, pg, pg, P()))
         self._decode_jit = jax.jit(self._decode_step,
                                    donate_argnums=(1, 2, 3))
         if self.paged:
@@ -193,13 +224,27 @@ class Engine:
             self.prefill_chunk = prefill_chunk
             self.prefill_budget = (prefill_budget
                                    or prefill_chunk * page_size)
-            self._chunk_jit = jax.jit(
-                make_chunked_prefill_step(model, prefill_chunk, *scales),
-                donate_argnums=(2, 3))
-            self._tail_jit = jax.jit(
-                make_prefill_token_step(model, *scales),
-                donate_argnums=(2, 3))
+            raw_chunk = make_chunked_prefill_step(model, prefill_chunk,
+                                                  *scales)
+            raw_tail = make_prefill_token_step(model, *scales)
             self._dense0 = model.init_slots(1)  # zero pf-state template
+            if self.tp_size > 1:
+                dense_specs = S.decode_slot_specs(model, self._dense0)
+                # page snapshots stack the dense state on a leading chunk
+                # axis, shifting every sharded axis right by one
+                snap_specs = {k: P(*((None,) + tuple(s)))
+                              for k, s in dense_specs.items()}
+                raw_chunk = tp_serving_wrap(
+                    raw_chunk, mesh,
+                    in_specs=(pspecs, dense_specs, pg, pg, P(), P(),
+                              P(), P()),
+                    out_specs=(dense_specs, pg, pg, P(), snap_specs))
+                raw_tail = tp_serving_wrap(
+                    raw_tail, mesh,
+                    in_specs=(pspecs, dense_specs, pg, pg, P(), P(), P()),
+                    out_specs=(dense_specs, pg, pg, P()))
+            self._chunk_jit = jax.jit(raw_chunk, donate_argnums=(2, 3))
+            self._tail_jit = jax.jit(raw_tail, donate_argnums=(2, 3))
             self._warmup()
         if radix_cache:
             if not self.chunked:
@@ -672,6 +717,16 @@ class Engine:
         ttfts = [r.ttft for r in done if r.ttft is not None]
         queues = [r.queue_s for r in done if r.queue_s is not None]
         prefills = [r.prefill_s for r in done if r.prefill_s is not None]
+        # TPOT: decode time per generated token after the first (TTFT owns
+        # the first token), per request — the tail-latency complement
+        tpots = [(r.finish - r.arrival - r.ttft) / (len(r.generated) - 1)
+                 for r in done
+                 if r.finish is not None and r.ttft is not None
+                 and len(r.generated) > 1]
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
         gen = sum(len(r.generated) for r in done)
         out = {
             "engine_steps": self.engine_steps,
@@ -686,6 +741,11 @@ class Engine:
             "straggler_steps": self.straggler_steps,
             "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "ttft_max_s": float(np.max(ttfts)) if ttfts else 0.0,
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p99_s": pct(ttfts, 99),
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
             "queue_ms_mean": 1e3 * float(np.mean(queues)) if queues else 0.0,
             "prefill_ms_mean": (1e3 * float(np.mean(prefills))
                                 if prefills else 0.0),

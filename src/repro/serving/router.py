@@ -1,0 +1,285 @@
+"""Load-aware multi-replica request router (DESIGN.md §12).
+
+A `Router` fronts N independent serving replicas — each an `Engine` with
+its own PagePool, RadixCache and continuous-batching scheduler (and, under
+TP, its own ("data", "model") mesh slice) — and places every incoming
+request by:
+
+  1. radix affinity — if any replica's radix tree already caches a
+     page-aligned prefix of the prompt, route to the replica with the
+     LONGEST cached prefix (shared-prefix traffic lands where its pages
+     already live, so the hit is a reference, not a recompute);
+  2. load — otherwise the replica with the most free pool pages, breaking
+     ties by fewest outstanding requests (queue + live lanes), then by
+     lowest replica index.
+
+Both rules read only scheduler/pool state, so placement is a DETERMINISTIC
+function of the submission sequence — replayed traffic routes identically
+(asserted by tests/test_sharded_serving.py).
+
+Engine request ids are per-engine counters and collide across replicas, so
+the router owns its own id space and maps router-rid -> (replica,
+engine-rid).
+
+Failure drains reuse the recompute-preemption pattern: killing a replica
+folds every outstanding request's generated tokens into its prompt and
+resubmits the remainder on a survivor, then stitches pre-kill and
+post-kill tokens back together — every request still completes with its
+exact token budget, conditioned on everything it already emitted (token
+VALUES across the fold carry DESIGN.md §7's amax-composition caveat, same
+as engine preemption).  The
+`_kill_replica` attribute is the chaos hook (same pattern as
+checkpoint/manager.py's `_fail_next_write`): set it to a replica index and
+the next `step()` executes the kill.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .engine import Engine
+
+
+@dataclass
+class RouterRequest:
+    """Router-side request record (the stitched cross-replica view)."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float
+    replica: int = -1                   # current / last placement
+    engine_rid: int = -1                # id within that replica's engine
+    generated: list = field(default_factory=list)
+    ttft: float | None = None
+    finish: float | None = None
+    evacuations: int = 0                # replica deaths survived
+    done: bool = False
+
+
+class _SchedView:
+    """Duck-type the scheduler surface `run_load` reads off an Engine."""
+
+    def __init__(self, router: "Router"):
+        self._r = router
+
+    @property
+    def queue(self):
+        return [q for e in self._r.live_replicas() for q in e.scheduler.queue]
+
+    @property
+    def requests(self):
+        return self._r.requests
+
+
+class Router:
+    """Route requests across serving replicas; aggregate fleet metrics.
+
+    Args:
+      replicas: list of independently constructed Engines (each owns its
+        pool/scheduler/radix; under TP each was built on its own mesh).
+      clock: shared time source (the replicas should use the same one so
+        TTFT/TPOT aggregate on one axis).
+
+    The Engine-compatible surface (submit/step/drain/metrics, plus the
+    `scheduler`/`lane_req`/`clock` attributes `run_load` duck-types) lets
+    every existing load harness drive a replica fleet unchanged.
+    """
+
+    def __init__(self, replicas: list[Engine], clock=time.monotonic):
+        if not replicas:
+            raise ValueError("Router needs at least one replica")
+        self.replicas = list(replicas)
+        self.clock = clock
+        self.dead: set[int] = set()
+        self.requests: dict[int, RouterRequest] = {}
+        self._live: dict[tuple[int, int], RouterRequest] = {}
+        self._next_rid = 0
+        self.placements: list[int] = []   # replica index per submission
+        self.scheduler = _SchedView(self)
+        self._kill_replica: int | None = None  # chaos hook: die at next step
+        self.kills = 0
+        self.requeues = 0
+
+    # ---- replica views ---------------------------------------------------
+
+    def live_replicas(self) -> list[Engine]:
+        return [e for i, e in enumerate(self.replicas) if i not in self.dead]
+
+    @property
+    def lane_req(self):
+        return [r for e in self.live_replicas() for r in e.lane_req]
+
+    # ---- placement -------------------------------------------------------
+
+    def _affinity(self, idx: int, prompt) -> int:
+        eng = self.replicas[idx]
+        if eng.radix is None:
+            return 0
+        return eng.radix.match_pages(prompt)
+
+    def _load_key(self, idx: int):
+        eng = self.replicas[idx]
+        free = eng.pool.free_count if eng.pool is not None else 1 << 30
+        outstanding = (eng.scheduler.queue_depth
+                       + sum(r is not None for r in eng.lane_req))
+        return (-free, outstanding, idx)
+
+    def place(self, prompt) -> int:
+        """Deterministic placement: radix affinity first, load second."""
+        alive = [i for i in range(len(self.replicas)) if i not in self.dead]
+        if not alive:
+            raise RuntimeError("all replicas dead")
+        hits = {i: self._affinity(i, prompt) for i in alive}
+        best_hit = max(hits.values())
+        if best_hit > 0:
+            alive = [i for i in alive if hits[i] == best_hit]
+        return min(alive, key=self._load_key)
+
+    # ---- submission / stepping -------------------------------------------
+
+    def submit(self, prompt, max_new: int,
+               arrival: float | None = None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        arrival = self.clock() if arrival is None else arrival
+        rid = self._next_rid
+        self._next_rid += 1
+        req = RouterRequest(rid=rid, prompt=prompt, max_new=max_new,
+                            arrival=arrival)
+        self.requests[rid] = req
+        self._dispatch(req, prompt, max_new, arrival)
+        self.placements.append(req.replica)
+        return rid
+
+    def _dispatch(self, req: RouterRequest, prompt, max_new: int,
+                  arrival: float) -> None:
+        idx = self.place(prompt)
+        erid = self.replicas[idx].submit(prompt, max_new, arrival=arrival)
+        req.replica, req.engine_rid = idx, erid
+        self._live[(idx, erid)] = req
+
+    def step(self) -> list[RouterRequest]:
+        """One fleet step: honor a pending kill, then step every live
+        replica (index order — determinism), fold finished engine requests
+        into their router records."""
+        if self._kill_replica is not None:
+            idx, self._kill_replica = self._kill_replica, None
+            self.kill_replica(idx)
+        finished: list[RouterRequest] = []
+        for i, eng in enumerate(self.replicas):
+            if i in self.dead:
+                continue
+            for er in eng.step():
+                req = self._live.pop((i, er.rid), None)
+                if req is None:
+                    continue
+                req.generated.extend(er.generated)
+                if req.ttft is None:
+                    req.ttft = er.ttft
+                req.finish = self.clock()
+                req.done = True
+                finished.append(req)
+        return finished
+
+    def drain(self, max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Step until every routed request completes; {rid: tokens}."""
+        for _ in range(max_steps):
+            if all(r.done for r in self.requests.values()):
+                break
+            self.step()
+        else:
+            raise RuntimeError(f"drain did not finish in {max_steps} steps")
+        return {r.rid: list(r.generated) for r in self.requests.values()
+                if r.done}
+
+    # ---- failure drain ---------------------------------------------------
+
+    def kill_replica(self, idx: int) -> int:
+        """Drop a replica and requeue its outstanding work on survivors.
+
+        Every in-flight request folds its already-generated tokens into the
+        prompt (the scheduler's recompute-preemption move) and resubmits
+        the remaining budget elsewhere; queued requests resubmit whole.
+        Returns the number of requests evacuated.
+        """
+        if idx in self.dead:
+            return 0
+        self.dead.add(idx)
+        self.kills += 1
+        stranded = [(key, req) for key, req in self._live.items()
+                    if key[0] == idx]
+        moved = 0
+        for key, req in stranded:
+            del self._live[key]
+            er = self.replicas[idx].scheduler.requests.get(req.engine_rid)
+            pre = list(er.generated) if er is not None else []
+            if er is not None and req.ttft is None:
+                req.ttft = er.ttft          # first token predates the kill
+            req.generated.extend(pre)
+            req.evacuations += 1
+            remaining = req.max_new - len(req.generated)
+            if remaining <= 0:
+                req.finish = self.clock()
+                req.done = True
+                continue
+            folded = (np.concatenate([req.prompt,
+                                      np.asarray(req.generated, np.int32)])
+                      if req.generated else req.prompt)
+            self._dispatch(req, folded, remaining, req.arrival)
+            self.requeues += 1
+            moved += 1
+        return moved
+
+    # ---- metrics ---------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Fleet aggregates: engine-metric sums plus router-level tail
+        latency (p50/p99 TTFT and TPOT over ROUTED requests — the numbers
+        a client of the fleet would observe) and placement counters."""
+        done = [r for r in self.requests.values() if r.done]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [(r.finish - r.arrival - r.ttft) / (len(r.generated) - 1)
+                 for r in done
+                 if r.finish is not None and r.ttft is not None
+                 and len(r.generated) > 1]
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
+        reps = [e.metrics() for e in self.live_replicas()]
+        wall = sum(m["decode_wall_s"] for m in reps)
+        gen = sum(len(r.generated) for r in done)
+        out = {
+            "replicas": len(self.replicas),
+            "replicas_dead": len(self.dead),
+            "completed": len(done),
+            "generated_tokens": gen,
+            "decode_steps": sum(m["decode_steps"] for m in reps),
+            "decode_wall_s": wall,
+            # replicas decode concurrently: fleet throughput sums each
+            # replica's own rate rather than dividing by summed wall time
+            "decode_tok_s": sum(m["decode_tok_s"] for m in reps),
+            "queue_depth": sum(m["queue_depth"] for m in reps),
+            "preemptions": sum(m["preemptions"] for m in reps),
+            "kills": self.kills,
+            "requeues": self.requeues,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p99_s": pct(ttfts, 99),
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else 0.0,
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
+            "placements": [self.placements.count(i)
+                           for i in range(len(self.replicas))],
+        }
+        hits = [m.get("prefix_hit_rate") for m in reps
+                if "prefix_hit_rate" in m]
+        if hits:
+            lookups = sum(m["radix"]["lookups"] for m in reps
+                          if "radix" in m)
+            hit_pages = sum(m["radix"]["hit_pages"] for m in reps
+                            if "radix" in m)
+            out["prefix_hit_rate"] = (hit_pages / lookups
+                                      if lookups else 0.0)
+        return out

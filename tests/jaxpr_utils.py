@@ -38,6 +38,19 @@ def assert_bitwise_oracle(op_fn, ref_fn, *args, **kw):
                                   np.asarray(ref_fn(*args, **kw)))
 
 
+def fresh_trace(fn, *args):
+    """make_jaxpr through a throwaway wrapper, so the inspection trace
+    never shares jax's tracing cache with a live jitted callable of `fn`.
+
+    Tests retrace under patched dispatch (ops._on_tpu, fuse_kernels
+    flips); a shared cache entry either hands back the stale pre-patch
+    route or poisons the live callable with a route the real backend
+    cannot compile (Engine.decode_jaxpr guards the same way internally).
+    """
+    import jax
+    return jax.make_jaxpr(lambda *a: fn(*a))(*args)
+
+
 def collect_outside_pallas(jaxpr, out):
     """Append (primitive name, out shape) for every eqn reachable from
     `jaxpr`, recursing through sub-jaxprs (pjit, custom_vjp, scan, ...) but

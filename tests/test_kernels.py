@@ -502,14 +502,17 @@ def test_fused_decode_jaxpr_streams_pages():
     dense = {(b, nb, page, kv, dh), (b, nb * page, kv, dh)}
 
     def trace(fused):
+        from jaxpr_utils import fresh_trace
         cfg = preset("full8", "native").replace(fuse_kernels=fused)
         orig = ops._on_tpu
         ops._on_tpu = lambda: True
         try:
-            return jax.make_jaxpr(
+            # fresh_trace: retracing under the patched _on_tpu must not
+            # share a cache entry with the unpatched route
+            return fresh_trace(
                 lambda q: L.paged_decode_attention(
                     cfg, q, kp, vp, table, ks, vs, q_pos=q_pos,
-                    t_valid=jnp.int32(t_valid)))(qt)
+                    t_valid=jnp.int32(t_valid)), qt)
         finally:
             ops._on_tpu = orig
 

@@ -254,6 +254,30 @@ def test_fused_decode_bitexact_vs_unfused(arch):
     assert outs[True] == outs[False], arch
 
 
+def test_fresh_trace_keeps_live_decode_route_unpoisoned():
+    """Inspection traces under a patched kernel dispatch must run through
+    jaxpr_utils.fresh_trace: a throwaway wrapper keeps the trace out of the
+    live _decode_jit's cache, so after tracing the TPU route the engine
+    still decodes on the CPU-compilable one."""
+    from jaxpr_utils import fresh_trace
+    from repro.kernels import ops
+    eng = make_engine("granite-3-8b", mode="native", max_lanes=2,
+                      page_size=4, max_ctx=32)
+    slots = dict(eng.slots, pos=jnp.zeros((eng.max_lanes,), jnp.int32))
+    orig = ops._on_tpu
+    ops._on_tpu = lambda: True
+    try:
+        jaxpr = fresh_trace(eng._decode_step, eng.params, slots, eng.pool.k,
+                            eng.pool.v, jnp.asarray(eng.table),
+                            jnp.asarray(eng.h_tokens), np.int32(0))
+    finally:
+        ops._on_tpu = orig
+    assert any(e[0] == "pallas_call"
+               for e in ops.eqns_outside_pallas(jaxpr.jaxpr))
+    r = eng.submit(np.arange(1, 9), 4)     # live route still compiles
+    assert len(eng.drain()[r]) == 4
+
+
 def test_decode_loop_single_fused_computation_per_step():
     """The decode hot loop is one jitted computation per step: a single
     trace overall (jit-stable across occupancy changes) and exactly one

@@ -1,0 +1,331 @@
+"""Sharded int8 serving: TP paged decode + multi-replica routing suite.
+
+The headline contract (DESIGN.md §12): serving is parameterized by the
+quantization algorithm, not the device layout — a tp=2 engine (int8 KV
+pages head-sharded across model ranks, amax scales pmax-synced) greedy-
+decodes bit-identical tokens to the single-device engine, and a replica
+tier behind the Router preserves them too as long as the per-step lane
+composition matches (§7's amax-composition caveat).  Cross-rank decode
+traffic must be integer tensors + scalar floats only.
+
+Multi-device tests run in subprocesses: the virtual device count must be
+set via XLA_FLAGS before jax initializes.  Router policy tests are pure
+host logic and run in-process on one device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(prog: str, timeout: int = 1500) -> str:
+    env = dict(os.environ, PYTHONPATH="src:tests",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=_ROOT)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    return r.stdout
+
+
+_PRELUDE = textwrap.dedent("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.serving import make_engine, make_router, make_sharded_engine
+
+    ARCHS = ["granite-3-8b", "granite-moe-1b-a400m", "zamba2-7b"]
+    # chunked prefill everywhere: tp>1 requires it, and the tp=1 baselines
+    # must quantize prefill at the same (page-chunk) granularity to compare
+    KW = dict(max_lanes=2, page_size=4, max_ctx=32, prefill_mode="chunked")
+    PROMPTS = [np.arange(1, 9), np.arange(3, 15)]
+    SOLO = [np.arange(1 + i, 9 + i) for i in range(4)]
+
+    def batch_tokens(eng, prompts, max_new=6):
+        rids = [eng.submit(p, max_new) for p in prompts]
+        out = eng.drain()
+        return [out[r] for r in rids]
+
+    def solo_tokens(eng, prompts, max_new=5):
+        toks = []
+        for p in prompts:
+            r = eng.submit(p, max_new)
+            toks.append(eng.drain()[r])
+        return toks
+""")
+
+
+_EXACT_PROG = _PRELUDE + textwrap.dedent("""
+    # tp x dp bit-exactness sweep vs the single-device engine, per family.
+    #   tp=2, dp=1: same lane batch -> co-batched submissions compare.
+    #   dp=2 (router): placement may split a batch across replicas, which
+    #   changes lane composition and therefore amax scales (§7) — so the
+    #   replica-tier comparisons run solo-composition (one request in
+    #   flight at a time; identical lane batch wherever it lands).
+    for arch in ARCHS:
+        ref = make_engine(arch, **KW)
+        want_batch = batch_tokens(ref, PROMPTS)
+        # fresh engine for the solo baseline: retired lanes keep their
+        # last slot state, which feeds the shared amax of later steps —
+        # composition includes HISTORY, not just live lanes (§7)
+        ref2 = make_engine(arch, **KW)
+        want_solo = solo_tokens(ref2, SOLO)
+
+        tp2 = make_sharded_engine(arch, tp=2, **KW)
+        assert batch_tokens(tp2, PROMPTS) == want_batch, arch
+        print("OK", arch, "tp2")
+
+        for tp in (1, 2):
+            router = make_router(arch, replicas=2, tp=tp, **KW)
+            assert solo_tokens(router, SOLO) == want_solo, (arch, tp)
+            m = router.metrics()
+            assert m["completed"] == len(SOLO)
+            print("OK", arch, f"dp2 tp{tp}")
+    print("EXACT_OK")
+""")
+
+
+_PREEMPT_RADIX_PROG = _PRELUDE + textwrap.dedent("""
+    # Same scheduling trajectory on both engines (deterministic stepping,
+    # identical pool sizes) -> identical tokens THROUGH a recompute
+    # preemption and THROUGH a radix-cache hit, tp=1 vs tp=2.
+    arch = "granite-3-8b"
+
+    def preempt_run(build):
+        eng = build(prefill_mode="chunked", max_lanes=3, page_size=4,
+                    max_ctx=40, n_pages=11)
+        rids = [eng.submit(np.arange(1 + i, 9 + i), 18) for i in range(3)]
+        out = eng.drain()
+        m = eng.metrics()
+        assert m["preemptions"] > 0, "pool was big enough — no preemption"
+        return [out[r] for r in rids], m["preemptions"]
+
+    toks1, n1 = preempt_run(lambda **kw: make_engine(arch, **kw))
+    toks2, n2 = preempt_run(lambda **kw: make_sharded_engine(arch, tp=2, **kw))
+    assert n1 == n2 and toks1 == toks2, (n1, n2)
+    print("OK preempt", n1)
+
+    def radix_run(build):
+        eng = build(radix_cache=True, **KW)
+        first = solo_tokens(eng, [np.arange(1, 9)], max_new=5)[0]
+        again = solo_tokens(eng, [np.arange(1, 9)], max_new=5)[0]
+        m = eng.metrics()
+        assert m["prefix_hit_rate"] > 0, "second pass missed the radix"
+        return first, again, m["prefix_hit_rate"]
+
+    f1, a1, h1 = radix_run(lambda **kw: make_engine(arch, **kw))
+    f2, a2, h2 = radix_run(lambda **kw: make_sharded_engine(arch, tp=2, **kw))
+    assert f1 == a1, "radix hit changed tokens on the baseline"
+    assert (f1, a1, h1) == (f2, a2, h2)
+    print("OK radix", h1)
+    print("PREEMPT_RADIX_OK")
+""")
+
+
+_WIRE_PROG = _PRELUDE + textwrap.dedent("""
+    # Integer-wire acceptance on the tp=2 decode trace, per family: every
+    # tensor-shaped collective payload (all_gather / ppermute /all_to_all)
+    # is integer dtype; float collectives are scalar-only (the pmax'ed
+    # amax scales).  fresh_trace keeps the inspection out of the live
+    # _decode_jit's tracing cache (see tests/jaxpr_utils.py).
+    from jaxpr_utils import fresh_trace
+    from repro.kernels import ops
+
+    for arch in ARCHS + ["falcon-mamba-7b"]:
+        eng = make_sharded_engine(arch, tp=2, **KW)
+        slots = dict(eng.slots, pos=jnp.zeros((eng.max_lanes,), jnp.int32))
+        kp, vp = ((eng.pool.k, eng.pool.v) if eng.paged
+                  else (jnp.zeros((0,), jnp.int8),) * 2)
+        jaxpr = fresh_trace(eng._decode_step, eng.params, slots, kp, vp,
+                            jnp.asarray(eng.table),
+                            jnp.asarray(eng.h_tokens), np.int32(0))
+        colls = ops.collective_eqns(jaxpr.jaxpr)
+        assert colls, (arch, "no collectives — tp=2 trace not sharded?")
+        floats = [c for c in colls if c[2] is not None
+                  and jnp.issubdtype(c[2], jnp.floating)]
+        assert all(c[1] == () for c in floats), \\
+            (arch, [c for c in floats if c[1] != ()])
+        wires = [c for c in colls
+                 if c[0] in ("all_gather", "ppermute", "all_to_all")]
+        assert wires and all(jnp.issubdtype(c[2], jnp.integer)
+                             for c in wires), (arch, wires)
+        print("OK wire", arch)
+    print("WIRE_OK")
+""")
+
+
+def test_tp_dp_greedy_bitexact_sweep():
+    """tp in {1,2} x dp-replicas in {1,2}: greedy tokens match the
+    single-device engine bitwise for lm / moe / hybrid."""
+    out = _run(_EXACT_PROG)
+    assert "EXACT_OK" in out, out
+
+
+def test_tp_preemption_and_radix_hit_bitexact():
+    """Recompute preemption and radix-hit trajectories replay identically
+    under tp=2 (same schedule, same tokens, same hit rate)."""
+    out = _run(_PREEMPT_RADIX_PROG)
+    assert "PREEMPT_RADIX_OK" in out, out
+
+
+def test_tp_decode_wire_integer_only():
+    """No tensor-shaped float ever crosses ranks during sharded decode."""
+    out = _run(_WIRE_PROG)
+    assert "WIRE_OK" in out, out
+
+
+# --------------------------------------------------------------------------
+# Router policy (host logic — in-process, single device)
+# --------------------------------------------------------------------------
+
+
+def _fake_clock(dt=0.001):
+    """Deterministic time source: advances a fixed dt per call, so TTFT
+    accounting and run_load's arrival gating replay identically."""
+    state = {"t": 0.0}
+
+    def clock():
+        state["t"] += dt
+        return state["t"]
+    return clock
+
+
+def _mini_router(replicas=2, **kw):
+    from repro.serving import make_router
+    kw.setdefault("max_lanes", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_ctx", 32)
+    return make_router("granite-3-8b", replicas=replicas,
+                       clock=_fake_clock(), **kw)
+
+
+def test_router_placement_deterministic_under_seeded_load():
+    """Same seeded traffic + virtual clock -> identical placement sequence
+    and identical tokens on two independent router instances."""
+    from repro.serving import poisson_traffic, run_load
+    traffic = poisson_traffic(rate=500.0, n_requests=8,
+                              prompt_lens=(8, 12), gen_lens=(4, 6), seed=7)
+    runs = []
+    for _ in range(2):
+        router = _mini_router()
+        results, m = run_load(router, traffic)
+        runs.append((router.placements, results))
+    assert runs[0] == runs[1]
+    assert len(runs[0][1]) == 8
+    assert sum(m["placements"]) == 8
+
+
+def test_router_affinity_beats_single_replica_hit_rate():
+    """sharing=0.9 workload: radix-affinity placement keeps the fleet's
+    prefix hit rate at least the single-replica rate (shared-prefix
+    traffic lands on the replica that already caches the prefix)."""
+    from repro.serving import make_engine, shared_prefix_traffic
+    traffic = shared_prefix_traffic(rate=100.0, n_requests=12, sharing=0.9,
+                                    prefix_len=16, n_prefixes=2,
+                                    tail_lens=(4, 8), gen_lens=(4,), seed=5)
+    kw = dict(max_lanes=2, page_size=4, max_ctx=40, prefill_mode="chunked",
+              radix_cache=True)
+
+    def hit_rate(target):
+        for r in traffic:                 # sequential: deterministic state
+            rid = target.submit(r["prompt"], r["max_new"])
+            target.drain()
+        return target.metrics()["prefix_hit_rate"]
+
+    single = hit_rate(make_engine("granite-3-8b", **kw))
+    fleet = hit_rate(_mini_router(**kw))
+    assert single > 0.3, single           # the workload does share
+    assert fleet >= single, (fleet, single)
+
+
+def test_router_kill_replica_drains_and_requeues():
+    """Chaos hook (`_kill_replica`, the checkpoint-manager pattern): kill a
+    replica mid-decode; its in-flight work folds generated tokens into the
+    prompt and requeues on the survivor, everything completes with its
+    exact token budget, and the dead replica takes no further work."""
+    router = _mini_router()
+    rids = [router.submit(np.arange(1 + i, 9 + i), 6) for i in range(4)]
+    for _ in range(3):
+        router.step()
+    victim = next(r.replica for r in router.requests.values())
+    router._kill_replica = victim
+    out = router.drain()
+    m = router.metrics()
+    assert m["kills"] == 1 and m["replicas_dead"] == 1
+    assert m["requeues"] >= 1
+    for rid in rids:
+        assert len(out[rid]) == 6, (rid, len(out[rid]))
+    for req in router.requests.values():
+        assert req.replica != victim      # everyone ended on a survivor
+    evac = [r for r in router.requests.values() if r.evacuations]
+    assert evac and all(r.done for r in evac)
+    # a post-kill submission also avoids the corpse
+    rid2 = router.submit(np.arange(2, 10), 4)
+    assert router.requests[rid2].replica != victim
+    assert len(router.drain()[rid2]) == 4
+
+
+def test_router_rid_spaces_do_not_collide():
+    """Two replicas hand out colliding per-engine rids; the router's own
+    rid space maps through (replica, engine_rid) without mixing streams."""
+    router = _mini_router()
+    # force one request onto each replica by loading replica 0 first
+    a = router.submit(np.arange(1, 9), 8)
+    router.step()
+    b = router.submit(np.arange(3, 15), 4)
+    keys = set(router._live)
+    assert len(keys) == 2
+    assert len({k[0] for k in keys}) == 2, keys   # distinct replicas
+    out = router.drain()
+    assert len(out[a]) == 8 and len(out[b]) == 4
+
+
+def test_shard_serving_spec_rules_single_process():
+    """Spec rules for serving state are pure metadata — no devices needed:
+    the recurrent families' registry entries and the page-pool / decode-
+    slot specs place the model axis where DESIGN.md §12 says."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get
+    from repro.core import preset
+    from repro.launch.shard import (decode_slot_specs, page_pool_spec,
+                                    tp_param_specs)
+    from repro.models import build_model
+
+    qcfg = preset("full8", "native")
+
+    # ssm (mamba1): d_inner channel split — x_proj/out_proj row, dt col
+    m = build_model(get("falcon-mamba-7b").reduced(), qcfg, tp_size=2)
+    params = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = tp_param_specs(m, params)
+    blk = specs["layers"]
+    assert blk["x_proj"][-2] == "model" and blk["out_proj"][-2] == "model"
+    assert blk["dt_proj"][-1] == "model" and blk["A_log"][-2] == "model"
+    assert blk["in_proj"] == P() and specs["embed"] == P()
+    slots = jax.eval_shape(lambda: m.init_slots(2))
+    sspec = decode_slot_specs(m, slots)
+    assert sspec["h"][2] == "model" and sspec["conv"] == P()
+    assert page_pool_spec(m) == P()       # no KV pages in a pure SSM
+
+    # hybrid (zamba2): SSD head split + attention head split, paged KV
+    h = build_model(get("zamba2-7b").reduced(), qcfg, tp_size=2)
+    hparams = jax.eval_shape(h.init, jax.random.PRNGKey(0))
+    hspecs = tp_param_specs(h, hparams)
+    mb = hspecs["layers"]
+    assert mb["dt_proj"][-1] == "model" and mb["A_log"][-1] == "model"
+    assert mb["in_proj"] == P() and mb["out_proj"] == P()
+    assert hspecs["shared"]["wq"][-1] == "model"
+    assert hspecs["shared"]["wo"][-2] == "model"
+    assert page_pool_spec(h) == P(None, None, None, "model", None)
+    hslots = jax.eval_shape(lambda: h.init_slots(2))
+    hs = decode_slot_specs(h, hslots)
+    assert hs["m_h"][2] == "model" and hs["m_conv"] == P()
+
+    # indivisible widths refuse manual TP
+    with pytest.raises(ValueError):
+        build_model(get("falcon-mamba-7b").reduced(), qcfg, tp_size=3)
