@@ -80,6 +80,69 @@ def train_lm(qcfg: QConfig, steps: int, batch: int = 8, seq: int = 32,
             "wall_s": time.time() - t0, "params": params, "model": model}
 
 
+def measure(call, *, warmup: int = 2, min_steps: int | None = None,
+            max_steps: int | None = None, target_cv: float = 0.10):
+    """Warmup-corrected, CV-guarded wall-clock of a nullary `call`.
+
+    `warmup` untimed calls absorb compile + first-dispatch cost (the old
+    steps=2-3 timings charged them to the measurement, which is why
+    fused-vs-unfused ratios oscillated 0.80x-1.11x between commits).  Then
+    timed calls accumulate until the coefficient of variation of the
+    per-call samples drops under `target_cv` — or `max_steps` caps the
+    spend (REPRO_BENCH_FAST shrinks both bounds).  The mean discards the
+    single slowest sample once there are enough (one GC pause or page-in
+    shouldn't own the number).
+
+    Returns (mean_s, cv, n_samples).
+    """
+    fast = bool(os.environ.get("REPRO_BENCH_FAST"))
+    if min_steps is None:
+        min_steps = 3 if fast else 6
+    if max_steps is None:
+        max_steps = 8 if fast else 32
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(call())
+    ts: list[float] = []
+    while True:
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        ts.append(time.perf_counter() - t0)
+        if len(ts) < min_steps:
+            continue
+        kept = sorted(ts)[:-1] if len(ts) >= 5 else ts
+        mu = float(np.mean(kept))
+        cv = float(np.std(kept) / mu) if mu > 0 else 0.0
+        if cv <= target_cv or len(ts) >= max_steps:
+            return mu, cv, len(ts)
+
+
+def step_cost(jitted, *args) -> dict:
+    """flops + HBM bytes of a jitted callable at `args`, from the compiled
+    computation's cost_analysis (per device under SPMD).  Older jax returns
+    a list of dicts, newer a dict — both handled; missing analysis (some
+    backends) degrades to zeros, never raises.
+    """
+    try:
+        ca = jitted.lower(*args).compile().cost_analysis() or {}
+    except Exception:
+        ca = {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def roofline_derived(cost: dict, dt_s: float, coll_bytes: float = 0.0) -> str:
+    """`derived`-field fragment: %-of-roofline at the bf16 AND int8 peaks
+    (launch/roofline.measured_fraction) for a timed row."""
+    from repro.launch.roofline import measured_fraction
+
+    fr = measured_fraction(cost.get("flops", 0.0), cost.get("bytes", 0.0),
+                           dt_s, coll_bytes)
+    return (f"%_of_roofline_bf16={fr['pct_bf16'] * 100:.4f};"
+            f"%_of_roofline_int8={fr['pct_int8'] * 100:.4f}")
+
+
 # rows emitted since the last take_records() — benchmarks.run snapshots
 # these into the append-style BENCH_<suite>.json trajectory files
 RECORDS: list[dict] = []

@@ -7,12 +7,19 @@ bit-exact, so this isolates the data-movement win of fusing Q_E2 into the
 matmul prologues and the five UBN quantizers into one pass).
 
 CSV rows (name,us_per_call,derived — `derived` is ';'-separated):
-  train/<config>_fused    — us per training step; tokens/s
+  train/<config>_fused    — us per training step; tokens/s; %_of_roofline
+                            at the bf16 and int8 peaks (common.measure
+                            warmup-corrected CV-guarded timing throughout)
   train/<config>_unfused  — same, fuse_kernels=False
   train/<config>_speedup  — fused-vs-unfused step-time ratio
   train/dp<N>_intwire     — sharded step @ DP=N, integer-wire grad sync
+                            (the packed wire_sync_tree codec)
   train/dp<N>_f32wire     — same layout, XLA f32 all-reduce sync
   train/dp_scaling        — dp4-vs-dp1 step-time ratio (int wire)
+  train/wire_codec        — dp=2 wire-bits=8: packed (tree codec,
+                            two-per-int16 hops) vs unpacked (per-leaf
+                            rings) step time + per-hop on-wire message
+                            element counts from the traced jaxpr
   train/ckpt              — packed QTensor checkpoint: save/restore
                             latency, packed-vs-dense-f32 state bytes
                             (lossless resume format) and the int8 serving
@@ -34,7 +41,7 @@ import subprocess
 import sys
 import time
 
-from .common import emit
+from .common import emit, measure, roofline_derived, step_cost
 
 
 def _configs(fast: bool):
@@ -53,18 +60,20 @@ def _configs(fast: bool):
     return cfgs
 
 
-def _time_steps(step_fn, params, opt, batch, n_steps):
-    import jax
+def _time_steps(step_fn, params, opt, batch):
+    """CV-guarded step timing (common.measure): warmup absorbed outside
+    the timer, samples accumulate until stable.  Returns (s, cv, n)."""
     import jax.numpy as jnp
 
-    # one warmup step outside the timer (compile + first dispatch)
-    p, o, m = step_fn(params, opt, batch, jnp.int32(0))
-    jax.block_until_ready(m["loss"])
-    t0 = time.perf_counter()
-    for i in range(n_steps):
-        p, o, m = step_fn(p, o, batch, jnp.int32(i + 1))
-    jax.block_until_ready(m["loss"])
-    return (time.perf_counter() - t0) / n_steps
+    state = {"p": params, "o": opt, "i": 0}
+
+    def call():
+        state["i"] += 1
+        state["p"], state["o"], m = step_fn(
+            state["p"], state["o"], batch, jnp.int32(state["i"]))
+        return m["loss"]
+
+    return measure(call)
 
 
 def main():
@@ -78,7 +87,6 @@ def main():
     from repro.optim import init_momentum
 
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
-    n_steps = 3 if fast else 8
 
     for name, arch, batch_sz, seq in _configs(fast):
         task = TokenTask(vocab=arch.vocab, seq_len=seq, global_batch=batch_sz)
@@ -92,10 +100,12 @@ def main():
             opt = init_momentum(params)
             step_fn = jax.jit(
                 make_train_step(model, qcfg, model.labels(params)))
-            dt = _time_steps(step_fn, params, opt, batch, n_steps)
+            dt, cv, n = _time_steps(step_fn, params, opt, batch)
+            cost = step_cost(step_fn, params, opt, batch, jnp.int32(0))
             step_us[label] = dt * 1e6
             emit(f"train/{name}_{label}", dt * 1e6,
-                 f"tok_s={tokens / dt:.1f};steps={n_steps}")
+                 f"tok_s={tokens / dt:.1f};steps={n};cv={cv:.3f};"
+                 + roofline_derived(cost, dt))
         emit(f"train/{name}_speedup", 0.0,
              f"fused_vs_unfused={step_us['unfused'] / step_us['fused']:.2f}x")
     _ckpt_bench(fast)
@@ -203,6 +213,7 @@ def _dp_scaling(fast: bool):
 def _dp_worker():
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.core import preset
     from repro.data import TokenTask
@@ -213,40 +224,73 @@ def _dp_worker():
     from repro.optim import init_momentum
 
     fast = bool(os.environ.get("REPRO_BENCH_FAST"))
-    n_steps = 2 if fast else 6
     name, arch, batch_sz, seq = _configs(fast)[0]
     task = TokenTask(vocab=arch.vocab, seq_len=seq, global_batch=batch_sz)
     tokens = batch_sz * seq
+
+    def run(dp, sync, codec="packed", wire_bits=16):
+        mesh = make_cpu_mesh(dp, 1)
+        qcfg = preset("full8", "native")
+        model = build_model(arch, qcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = init_momentum(params)
+        raw, specs = make_sharded_train_step(
+            model, qcfg, model.labels(params), mesh, params,
+            n_shards=4, grad_sync=sync, wire_codec=codec,
+            wire_bits=wire_bits)
+        step_fn = jax.jit(raw)
+        params = S.shard_arrays(mesh, params, specs["params"])
+        opt = S.shard_arrays(mesh, opt, specs["opt"])
+        batch = S.put_batch(mesh, task.batch(0))
+        dt, cv, n = _time_steps(step_fn, params, opt, batch)
+        cost = step_cost(step_fn, params, opt, batch, jnp.int32(0))
+        return dt, cv, n, cost
+
     base_us = {}
     for dp in (1, 2, 4):
         for sync, tag in (("int_ring", "intwire"), ("psum", "f32wire")):
-            mesh = make_cpu_mesh(dp, 1)
-            qcfg = preset("full8", "native")
-            model = build_model(arch, qcfg)
-            params = model.init(jax.random.PRNGKey(0))
-            opt = init_momentum(params)
-            raw, specs = make_sharded_train_step(
-                model, qcfg, model.labels(params), mesh, params,
-                n_shards=4, grad_sync=sync)
-            step_fn = jax.jit(raw)
-            params = S.shard_arrays(mesh, params, specs["params"])
-            opt = S.shard_arrays(mesh, opt, specs["opt"])
-            batch = S.put_batch(mesh, task.batch(0))
-            params, opt, m = step_fn(params, opt, batch, jnp.int32(0))
-            jax.block_until_ready(m["loss"])
-            t0 = time.perf_counter()
-            for i in range(n_steps):
-                params, opt, m = step_fn(params, opt, batch,
-                                         jnp.int32(i + 1))
-            jax.block_until_ready(m["loss"])
-            dt = (time.perf_counter() - t0) / n_steps
+            dt, cv, n, cost = run(dp, sync)
             base_us[(dp, tag)] = dt * 1e6
             print(f"ROW,train/dp{dp}_{tag},{dt * 1e6:.1f},"
-                  f"tok_s={tokens / dt:.1f};steps={n_steps};arch={name}")
+                  f"tok_s={tokens / dt:.1f};steps={n};cv={cv:.3f};"
+                  f"arch={name};" + roofline_derived(cost, dt))
     ratio = base_us[(1, 'intwire')] / base_us[(4, 'intwire')]
     wire = base_us[(4, 'f32wire')] / base_us[(4, 'intwire')]
     print(f"ROW,train/dp_scaling,0.0,"
           f"dp4_vs_dp1={ratio:.2f}x;f32_vs_int_at_dp4={wire:.2f}x")
+
+    # wire-codec A/B at dp=2, wire-bits=8: packed tree codec (one ring,
+    # two-per-int16 hops) vs the per-leaf unpacked rings — bit-identical
+    # weights, different wires.  Message elements come from the traced
+    # jaxpr (per hop: every ppermute eqn fires each of the n-1 hops).
+    dt_p, _, _, _ = run(2, "int_ring", codec="packed", wire_bits=8)
+    dt_u, _, _, _ = run(2, "int_ring", codec="leaf", wire_bits=8)
+
+    def hop_elems(codec):
+        mesh = make_cpu_mesh(2, 1)
+        qcfg = preset("full8", "native")
+        model = build_model(arch, qcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = init_momentum(params)
+        raw, _ = make_sharded_train_step(
+            model, qcfg, model.labels(params), mesh, params, n_shards=4,
+            grad_sync="int_ring", wire_codec=codec, wire_bits=8)
+        batch = jax.tree.map(jnp.asarray, task.batch(0))
+        jaxpr = jax.make_jaxpr(raw)(params, opt, batch, jnp.int32(0))
+        from repro.kernels.ops import collective_eqns
+        pps = [c for c in collective_eqns(jaxpr.jaxpr)
+               if c[0] == "ppermute"]
+        return sum(int(np.prod(c[1])) for c in pps), len(pps)
+
+    pe, pn = hop_elems("packed")
+    ue, un = hop_elems("leaf")
+    print(f"ROW,train/wire_codec,{dt_p * 1e6:.1f},"
+          f"packed_us={dt_p * 1e6:.1f};unpacked_us={dt_u * 1e6:.1f};"
+          f"packed_vs_unpacked={dt_u / dt_p:.2f}x;"
+          f"hop_elems_packed={pe};hop_elems_unpacked={ue};"
+          f"elem_reduction={ue / pe:.2f}x;"
+          f"ppermutes_packed={pn};ppermutes_unpacked={un};"
+          f"dp=2;wire_bits=8")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,330 @@
+"""Block-shape autotuner for the dispatched Pallas ops (DESIGN.md §13).
+
+The kernels' tile sizes are performance knobs, not numerics knobs: every
+candidate below changes only how the work is blocked over the grid (or how
+the TPU pipeliner schedules the grid), never which elements share an amax
+or a rounding step.  That is the autotuner's safety contract — a tuned
+entry can change wall-clock but CANNOT change a single output bit, and
+tests/test_autotune.py proves it per op against the default tiles.
+Knobs that ARE numerics (flash attention's q_chunk/kv_chunk set the
+per-chunk GridQuantizer amax granularity) are deliberately not tunable.
+
+Cache design (modeled on XLA's compilation cache):
+
+  key   = sha256 over {schema, op, shape/dtype signature, backend,
+          jax.__version__} — any of those changing means the old winner is
+          unvalidated, so it simply misses and defaults apply.
+  entry = one JSON file per key under $REPRO_AUTOTUNE_DIR (default
+          ~/.cache/repro-autotune): {"schema", "op", "sig", "backend",
+          "jax", "tiles", "us"}.
+  miss / corrupt / truncated file -> the op's current defaults, silently:
+  the tuner is an accelerator, never a dependency.
+
+`warm()` (also `python -m repro.kernels.autotune [--fast]`) sweeps
+representative shapes for every tunable op and persists the winners, so a
+fleet can pre-bake the cache exactly like it pre-bakes XLA's.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+import jax
+
+SCHEMA = 1
+
+# numerics-neutral candidate grids per op.  First entry == the dispatch
+# defaults, so a sweep can never do worse than shipping behavior.  "ds" is
+# the pallas dimension_semantics hint (grid scheduling, not blocking).
+CANDIDATES = {
+    "qmatmul": (
+        {"bm": 128, "bn": 128, "bk": 256},
+        {"bm": 256, "bn": 128, "bk": 256},
+        {"bm": 128, "bn": 256, "bk": 256},
+        {"bm": 128, "bn": 128, "bk": 512},
+        {"bm": 64, "bn": 128, "bk": 256},
+        {"bm": 256, "bn": 256, "bk": 128},
+    ),
+    "dgrad": (
+        {"bm": 128, "bk": 128, "bn": 128},
+        {"bm": 256, "bk": 128, "bn": 128},
+        {"bm": 128, "bk": 256, "bn": 128},
+        {"bm": 64, "bk": 128, "bn": 256},
+    ),
+    "wgrad": (
+        {"bm": 128, "bk": 128, "bn": 128},
+        {"bm": 256, "bk": 128, "bn": 128},
+        {"bm": 128, "bk": 256, "bn": 128},
+        {"bm": 64, "bk": 128, "bn": 256},
+    ),
+    "ubn_norm": (
+        {"bt": 256}, {"bt": 128}, {"bt": 64}, {"bt": 32},
+    ),
+    "flash_attention": (
+        {"ds": ("parallel", "arbitrary")},
+        {"ds": ("arbitrary", "arbitrary")},
+    ),
+    "paged_attention": (
+        {"ds": ("parallel", "arbitrary")},
+        {"ds": ("arbitrary", "arbitrary")},
+    ),
+}
+
+# in-memory memo: key -> tiles dict or None (negative lookups memoize too —
+# a missing cache must not cost a stat() per dispatched call)
+_MEMO: dict = {}
+
+
+def cache_dir() -> str:
+    return os.path.expanduser(
+        os.environ.get("REPRO_AUTOTUNE_DIR", "~/.cache/repro-autotune"))
+
+
+def _canon(v):
+    """JSON-stable form: tuples (shapes, ds) become lists recursively."""
+    if isinstance(v, (tuple, list)):
+        return [_canon(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _canon(v[k]) for k in sorted(v)}
+    return v
+
+
+def cache_key(op: str, sig) -> str:
+    """sha256 over everything that invalidates a tuned entry (the XLA
+    compilation-cache recipe): schema, op, the caller's shape/dtype/static
+    signature, the backend the timing ran on, and the jax version."""
+    blob = json.dumps({"schema": SCHEMA, "op": op, "sig": _canon(sig),
+                       "backend": jax.default_backend(),
+                       "jax": jax.__version__}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _entry_path(key: str) -> str:
+    return os.path.join(cache_dir(), key + ".json")
+
+
+def _detuple(tiles: dict) -> dict:
+    """JSON round-trips tuples as lists; restore tuple-typed knobs."""
+    out = dict(tiles)
+    if "ds" in out:
+        out["ds"] = tuple(out["ds"])
+    return out
+
+
+def lookup(op: str, sig):
+    """Tuned tiles for (op, sig) or None.  Corrupt, truncated, or
+    wrong-schema entries behave exactly like a miss."""
+    key = cache_key(op, sig)
+    if key in _MEMO:
+        return _MEMO[key]
+    tiles = None
+    try:
+        with open(_entry_path(key)) as f:
+            entry = json.load(f)
+        if (entry.get("schema") == SCHEMA and entry.get("op") == op
+                and isinstance(entry.get("tiles"), dict)):
+            tiles = _detuple(entry["tiles"])
+    except (OSError, ValueError):
+        tiles = None
+    _MEMO[key] = tiles
+    return tiles
+
+
+def store(op: str, sig, tiles: dict, us: float) -> str:
+    """Persist a winner (atomic write: rename over a temp file so a killed
+    process can only ever leave a whole entry or none)."""
+    key = cache_key(op, sig)
+    os.makedirs(cache_dir(), exist_ok=True)
+    path = _entry_path(key)
+    tmp = path + f".tmp.{os.getpid()}"
+    entry = {"schema": SCHEMA, "op": op, "sig": _canon(sig),
+             "backend": jax.default_backend(), "jax": jax.__version__,
+             "tiles": _canon(tiles), "us": float(us)}
+    with open(tmp, "w") as f:
+        json.dump(entry, f, indent=1)
+    os.replace(tmp, path)
+    _MEMO[key] = _detuple(dict(tiles))
+    return key
+
+
+def clear_memo() -> None:
+    """Drop the in-memory memo (tests mutate the disk cache under us)."""
+    _MEMO.clear()
+
+
+def tiles_for(op: str, sig, defaults: dict) -> dict:
+    """The dispatch-time query: tuned tiles when a valid cache entry
+    exists, else `defaults` verbatim.  Only knobs the caller's defaults
+    name are taken from the entry — a stale entry with extra keys cannot
+    inject unknown kwargs into a kernel call."""
+    tuned = lookup(op, sig)
+    if not tuned:
+        return defaults
+    return {**defaults, **{k: v for k, v in tuned.items() if k in defaults}}
+
+
+def tune(op: str, sig, call, candidates=None, reps: int = 3) -> dict:
+    """Time `call(tiles)` over the candidate grid and persist the winner.
+
+    `call` must run the op end to end and return a jax array (or pytree);
+    each candidate gets one untimed compile/warmup call, then `reps` timed
+    calls — the median is the score.  Candidates that fail to compile or
+    run are skipped (a tile too large for a shape is a candidate's
+    problem, not the tuner's).
+    """
+    best, best_us = None, float("inf")
+    for tiles in (candidates or CANDIDATES[op]):
+        try:
+            jax.block_until_ready(call(tiles))        # compile + warm
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(call(tiles))
+                ts.append(time.perf_counter() - t0)
+            us = sorted(ts)[len(ts) // 2] * 1e6
+        except Exception:
+            continue
+        if us < best_us:
+            best, best_us = tiles, us
+    if best is None:
+        raise RuntimeError(f"autotune: no candidate ran for op={op}")
+    store(op, sig, best, best_us)
+    return best
+
+
+def entries() -> list:
+    """All valid cache entries for the CURRENT backend+jax version, as
+    dicts (sorted by op) — the report/banner surface."""
+    out = []
+    try:
+        names = sorted(os.listdir(cache_dir()))
+    except OSError:
+        return out
+    for name in names:
+        if not name.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(cache_dir(), name)) as f:
+                e = json.load(f)
+        except (OSError, ValueError):
+            continue
+        if (e.get("schema") == SCHEMA
+                and e.get("backend") == jax.default_backend()
+                and e.get("jax") == jax.__version__
+                and isinstance(e.get("tiles"), dict)):
+            out.append(e)
+    return sorted(out, key=lambda e: (e["op"], json.dumps(e["sig"])))
+
+
+def _fmt_tiles(tiles: dict) -> str:
+    def one(v):
+        return "x".join(map(str, v)) if isinstance(v, (list, tuple)) else v
+    return "/".join(f"{k}={one(v)}" for k, v in sorted(tiles.items()))
+
+
+def banner_fragment() -> str:
+    """`tiles=...` summary for the [kernels] banner: per-op winning tiles
+    of the warmed cache, or `defaults` when nothing is tuned."""
+    es = entries()
+    if not es:
+        return "tiles=defaults"
+    per_op = {}
+    for e in es:
+        per_op.setdefault(e["op"], e["tiles"])
+    return "tiles=" + ",".join(
+        f"{op}:{_fmt_tiles(t)}" for op, t in sorted(per_op.items()))
+
+
+def report_rows() -> list:
+    """(op, sig, tiles, us) rows for launch/report.py --section kernels."""
+    return [(e["op"], json.dumps(e["sig"]), _fmt_tiles(e["tiles"]),
+             e.get("us", 0.0)) for e in entries()]
+
+
+# --------------------------------------------------------------------------
+# cache warming (representative shapes per op)
+# --------------------------------------------------------------------------
+
+
+def warm(fast: bool = False, verbose: bool = True) -> dict:
+    """Sweep representative shapes for every tunable op and persist the
+    winners.  On CPU the kernels run in interpret mode (the cache key's
+    backend field keeps those timings from ever leaking onto a TPU); on a
+    TPU backend the same sweep times compiled kernels.
+
+    fast=True trims each op to its first two candidates — the CI
+    bench-smoke lane uses this to prove the full path (sweep -> disk ->
+    reload) in seconds.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .backward import bwd_dgrad, bwd_wgrad
+    from .qmatmul import qmatmul
+    from .ubn import ubn_norm
+
+    interp = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(0)
+    m, k, n = (128, 128, 128) if fast else (256, 512, 256)
+    a8 = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    g = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    gamma = jnp.ones((n,), jnp.float32)
+    scal = jnp.asarray([128.0, 2.0 ** -7, 0.0], jnp.float32)
+    reps = 1 if fast else 3
+
+    jobs = {
+        "qmatmul": ((a8.shape, "int8", b8.shape, "int8", False),
+                    lambda t: qmatmul(a8, b8, interpret=interp, **t)),
+        "dgrad": ((g.shape, b8.shape, "affine", 8),
+                  lambda t: bwd_dgrad(g, b8, scal, mode="affine", k=8,
+                                      interpret=interp, **t)),
+        "wgrad": ((a8.shape, g.shape, "affine", 8),
+                  lambda t: bwd_wgrad(a8, g, scal, mode="affine", k=8,
+                                      interpret=interp, **t)),
+        "ubn_norm": ((x.shape, "rms"),
+                     lambda t: ubn_norm(x, gamma, None, kind="rms",
+                                        interpret=interp, **t)),
+    }
+    won = {}
+    for op, (sig, call) in jobs.items():
+        cands = CANDIDATES[op][:2] if fast else CANDIDATES[op]
+        won[op] = tune(op, sig, call, candidates=cands, reps=reps)
+        if verbose:
+            print(f"[autotune] {op} sig={sig} -> {_fmt_tiles(won[op])}")
+    # attention ops tune only the scheduling hint; on CPU both candidates
+    # lower identically under interpret mode, so warming them pins the
+    # default hint into the cache (cheap, and exercises the ds plumbing)
+    for op in ("flash_attention", "paged_attention"):
+        sig = ("warm", "default")
+        store(op, sig, CANDIDATES[op][0], 0.0)
+        won[op] = CANDIDATES[op][0]
+        if verbose:
+            print(f"[autotune] {op} sig={sig} -> {_fmt_tiles(won[op])}")
+    return won
+
+
+def main(argv=None):
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--fast", action="store_true",
+                   help="first-two-candidates sweep (CI smoke)")
+    p.add_argument("--report", action="store_true",
+                   help="print the cached entries and exit")
+    args = p.parse_args(argv)
+    if args.report:
+        for op, sig, tiles, us in report_rows():
+            print(f"[autotune] {op} {tiles} ({us:.1f}us) sig={sig}")
+        return
+    warm(fast=args.fast)
+    print(f"[autotune] cache dir {cache_dir()} "
+          f"({len(entries())} entries for backend="
+          f"{jax.default_backend()})")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .backward import bwd_dgrad, bwd_wgrad
 from .page_gather import page_gather
 from .paged_attention import flash_attention, paged_attention
@@ -60,10 +60,14 @@ def qmatmul_op(a8, b8, requant_inv=None, *, lim=127.0, force_kernel=False):
     Returns:
       (M, N) int32 accumulator, or (M, N) int8 payload with requant_inv.
     """
-    if _on_tpu():
-        return qmatmul(a8, b8, requant_inv, lim=lim, interpret=False)
-    if force_kernel:
-        return qmatmul(a8, b8, requant_inv, lim=lim, interpret=True)
+    if _on_tpu() or force_kernel:
+        tiles = autotune.tiles_for(
+            "qmatmul",
+            (a8.shape, str(a8.dtype), b8.shape, str(b8.dtype),
+             requant_inv is not None),
+            {"bm": 128, "bn": 128, "bk": 256})
+        return qmatmul(a8, b8, requant_inv, lim=lim,
+                       interpret=not _on_tpu(), **tiles)
     if requant_inv is None:
         return ref.qmatmul_ref(a8, b8)
     return ref.qmatmul_requant_ref(a8, b8, requant_inv, lim)
@@ -118,10 +122,12 @@ def dgrad_op(g, b8, scal, *, mode="affine", k=8, force_kernel=False):
       (M, K) f32 da — the integer dots' dequantized sum.  The error payload
       is produced inside the kernel prologue and never stored.
     """
-    if _on_tpu():
-        return bwd_dgrad(g, b8, scal, mode=mode, k=k, interpret=False)
-    if force_kernel:
-        return bwd_dgrad(g, b8, scal, mode=mode, k=k, interpret=True)
+    if _on_tpu() or force_kernel:
+        tiles = autotune.tiles_for(
+            "dgrad", (g.shape, b8.shape, mode, k),
+            {"bm": 128, "bk": 128, "bn": 128})
+        return bwd_dgrad(g, b8, scal, mode=mode, k=k,
+                         interpret=not _on_tpu(), **tiles)
     return ref.dgrad_ref(g, b8, scal, mode=mode, k=k)
 
 
@@ -136,10 +142,12 @@ def wgrad_op(a8, g, scal, *, mode="affine", k=8, force_kernel=False):
     Returns:
       (K, N) f32 db on the same dequantized scale as the unfused path.
     """
-    if _on_tpu():
-        return bwd_wgrad(a8, g, scal, mode=mode, k=k, interpret=False)
-    if force_kernel:
-        return bwd_wgrad(a8, g, scal, mode=mode, k=k, interpret=True)
+    if _on_tpu() or force_kernel:
+        tiles = autotune.tiles_for(
+            "wgrad", (a8.shape, g.shape, mode, k),
+            {"bm": 128, "bk": 128, "bn": 128})
+        return bwd_wgrad(a8, g, scal, mode=mode, k=k,
+                         interpret=not _on_tpu(), **tiles)
     return ref.wgrad_ref(a8, g, scal, mode=mode, k=k)
 
 
@@ -178,10 +186,15 @@ def ubn_norm_op(x, gamma, beta=None, *, kind="rms", k_mu=16, k_sigma=16,
     kw = dict(kind=kind, k_mu=k_mu, k_sigma=k_sigma, k_bn=k_bn,
               k_gamma=k_gamma, k_beta=k_beta, eps=eps)
     bt = _ubn_tile(kind, x.shape[0], x.shape[1])
-    if bt is not None and _on_tpu():
-        return ubn_norm(x, gamma, beta, interpret=False, bt=bt, **kw)
-    if bt is not None and force_kernel:
-        return ubn_norm(x, gamma, beta, interpret=True, bt=bt, **kw)
+    if bt is not None and (_on_tpu() or force_kernel):
+        # the tuned tile competes with the heuristic but never exceeds
+        # its VMEM-fit bound (the tile axis carries no statistics, so any
+        # bt is bit-identical — tests/test_autotune.py proves it)
+        tiles = autotune.tiles_for(
+            "ubn_norm", (x.shape, kind), {"bt": bt})
+        tiles["bt"] = min(tiles["bt"], bt)
+        return ubn_norm(x, gamma, beta, interpret=not _on_tpu(),
+                        **tiles, **kw)
     return ref.ubn_norm_ref(x, gamma, beta, **kw)
 
 
@@ -254,9 +267,15 @@ def paged_attention_op(q8, k_pages, v_pages, table, q_pos, t_valid,
     # issue, so sharded decode stays on the (bit-identical) oracle
     tp_sync = ref._AMAX_SYNC_AXIS is not None
     if not tp_sync and (_on_tpu() or force_kernel) and fits:
+        # the tunable here is the pipeliner's dimension_semantics hint —
+        # the kv chunking itself is amax granularity (numerics), not a knob
+        tiles = autotune.tiles_for(
+            "paged_attention", (q8.shape, k_pages.shape, table.shape, k_a),
+            {"ds": ("parallel", "arbitrary")})
         return paged_attention(q8, k_pages, v_pages, table, q_pos, t_valid,
                                q_scale, k_scale, v_scale, sm_scale=sm_scale,
-                               k_a=k_a, interpret=not _on_tpu())
+                               k_a=k_a, ds=tiles["ds"],
+                               interpret=not _on_tpu())
     return ref.paged_attention_ref(q8, k_pages, v_pages, table, q_pos,
                                    t_valid, q_scale, k_scale, v_scale,
                                    sm_scale=sm_scale, k_a=k_a)
@@ -290,10 +309,16 @@ def flash_attention_op(q8, k8, v8, q_pos, k_pos, k_valid, q_scale, k_scale,
     # cannot pmax, so sharded prefill/training takes the oracle
     tp_sync = ref._AMAX_SYNC_AXIS is not None
     if not tp_sync and (_on_tpu() or force_kernel) and fits:
+        # q_chunk/kv_chunk are per-chunk amax granularity — numerics, never
+        # autotuned; only the scheduling hint is a legal knob here
+        tiles = autotune.tiles_for(
+            "flash_attention",
+            (q8.shape, k8.shape, causal, q_chunk, kv_chunk, k_a),
+            {"ds": ("parallel", "arbitrary")})
         return flash_attention(q8, k8, v8, q_pos, k_pos, k_valid, q_scale,
                                k_scale, v_scale, causal=causal,
                                sm_scale=sm_scale, q_chunk=q_chunk,
-                               kv_chunk=kv_chunk, k_a=k_a,
+                               kv_chunk=kv_chunk, k_a=k_a, ds=tiles["ds"],
                                interpret=not _on_tpu())
     return ref.flash_attention_ref(q8, k8, v8, q_pos, k_pos, k_valid,
                                    q_scale, k_scale, v_scale, causal=causal,
@@ -336,6 +361,8 @@ def dispatch_report(cfg=None) -> dict:
     route = "kernel" if _on_tpu() else "oracle"
     rep = {"backend": jax.default_backend(), "route": route,
            "ops": {name: route for name in OPS}}
+    rep["autotune"] = {"entries": len(autotune.entries()),
+                       "dir": autotune.cache_dir()}
     if cfg is not None:
         rep["mode"] = cfg.mode
         rep["fused"] = bool(cfg.native and getattr(cfg, "fuse_kernels", True))
@@ -351,6 +378,7 @@ def dispatch_banner(cfg=None) -> str:
     if cfg is not None:
         fused = "fused" if rep["fused"] else "unfused"
         line += f" mode={rep['mode']} bwd/ubn={fused} attn={fused}"
+    line += " " + autotune.banner_fragment()
     return line
 
 

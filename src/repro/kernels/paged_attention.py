@@ -114,18 +114,23 @@ def _decode_out_kernel(table_ref, qpos_ref, tval_ref, q_ref, k_ref, v_ref,
         o_ref[0] = acc_ref[...].astype(jnp.float32) * pv_ref[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("sm_scale", "k_a", "interpret"))
+@functools.partial(jax.jit, static_argnames=("sm_scale", "k_a", "ds",
+                                             "interpret"))
 def paged_attention(q8: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     table: jax.Array, q_pos: jax.Array, t_valid,
                     q_scale, k_scale, v_scale, *, sm_scale: float,
-                    k_a: int = 8, interpret: bool = True) -> jax.Array:
+                    k_a: int = 8,
+                    ds: tuple = ("parallel", "arbitrary"),
+                    interpret: bool = True) -> jax.Array:
     """Fused paged decode attention (two streaming passes + scalar glue).
 
     q8: (B, H, dh) int8 query payload; k_pages/v_pages: (P, page, KV, dh)
     int8 arenas; table: (B, NB) int32 page ids (clamped; 0 = trash page);
     q_pos: (B,) int32; t_valid: scalar; scales: pow2 payload scales;
-    sm_scale: 1/sqrt(dh).  Returns (B, H, dh) f32, bit-exact against
-    ref.paged_attention_ref (== the unfused gather-then-attend path).
+    sm_scale: 1/sqrt(dh); ds: dimension_semantics scheduling hint for the
+    TPU pipeliner (autotuned — numerics-neutral, unlike the page size).
+    Returns (B, H, dh) f32, bit-exact against ref.paged_attention_ref
+    (== the unfused gather-then-attend path).
     """
     p_cnt, page, kv, dh = k_pages.shape
     b, kvg = q8.shape[:2]
@@ -139,7 +144,7 @@ def paged_attention(q8: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     kwargs = {}
     if not interpret and _CompilerParams is not None:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
+            dimension_semantics=tuple(ds))
     qspec = pl.BlockSpec((1, kvg, dh), lambda i, j, *_: (i, 0, 0))
     pagespec = pl.BlockSpec((1, page, kv, dh),
                             lambda i, j, tref, *_: (tref[i, j], 0, 0, 0))
@@ -265,12 +270,14 @@ def _tile_dots(a8, b8, scale, *, swap):
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "sm_scale", "q_chunk",
-                                             "kv_chunk", "k_a", "interpret"))
+                                             "kv_chunk", "k_a", "ds",
+                                             "interpret"))
 def flash_attention(q8: jax.Array, k8: jax.Array, v8: jax.Array,
                     q_pos: jax.Array, k_pos: jax.Array, k_valid: jax.Array,
                     q_scale, k_scale, v_scale, *, causal: bool,
                     sm_scale: float, q_chunk: int, kv_chunk: int,
-                    k_a: int = 8, interpret: bool = True) -> jax.Array:
+                    k_a: int = 8, ds: tuple = ("parallel", "arbitrary"),
+                    interpret: bool = True) -> jax.Array:
     """Tiled online-softmax attention on int8 payloads (fwd only).
 
     q8: (B, S, H, dh) int8; k8/v8: (B, T, KV, dh) int8 — pre-padded to
@@ -292,7 +299,7 @@ def flash_attention(q8: jax.Array, k8: jax.Array, v8: jax.Array,
     kwargs = {}
     if not interpret and _CompilerParams is not None:
         kwargs["compiler_params"] = _CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
+            dimension_semantics=tuple(ds))
     sspec = pl.BlockSpec((1, 1), lambda iq, ik: (0, 0))
     out = pl.pallas_call(
         functools.partial(_flash_kernel, b=b, kv=kv, g=g, dh=dh, nk=nk,

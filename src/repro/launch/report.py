@@ -73,6 +73,7 @@ def kernel_table() -> str:
     """Active kernel dispatch (kernel/oracle per op, fused/unfused per
     numeric mode) — what the examples' startup banners print, as a table."""
     from repro.core.qconfig import preset
+    from repro.kernels import autotune
     from repro.kernels.ops import dispatch_report
 
     rep = dispatch_report()
@@ -83,6 +84,13 @@ def kernel_table() -> str:
     for mode in ("sim", "native"):
         r = dispatch_report(preset("full8", mode))
         rows.append(f"| {mode} | {'fused' if r['fused'] else 'unfused'} |")
+    tuned = autotune.report_rows()
+    rows += ["", f"autotune cache: {rep['autotune']['entries']} entries "
+                 f"({rep['autotune']['dir']})"]
+    if tuned:
+        rows += ["", "| op | tuned tiles | us | sig |", "|---|---|---|---|"]
+        rows += [f"| {op} | {tiles} | {us:.1f} | `{sig}` |"
+                 for op, sig, tiles, us in tuned]
     return "\n".join(rows)
 
 

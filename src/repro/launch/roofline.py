@@ -128,6 +128,29 @@ def terms(art: dict) -> dict:
     }
 
 
+def measured_fraction(flops: float, mem_bytes: float, dt_s: float,
+                      coll_bytes: float = 0.0) -> dict:
+    """%-of-roofline for a MEASURED step time (the bench harness hook).
+
+    The roofline floor is max(compute, memory, collective) seconds at the
+    reference chip's peaks; the fraction is floor / measured.  Reported at
+    BOTH MXU peaks — "pct_bf16" (f32/bf16 peak) and "pct_int8" (the 2x
+    int8 peak the paper's data paths target): a fused-int8 step that looks
+    healthy against the bf16 peak but poor against the int8 peak is
+    leaving the MXU's 2x on the table, which is exactly the regression
+    this field exists to attribute.  On the CPU CI container the absolute
+    fractions are tiny (the constants model a TPU chip) — the signal is
+    their trajectory between commits, not their magnitude.
+    """
+    t_m = mem_bytes / HBM_BW
+    t_l = coll_bytes / LINK_BW
+    out = {}
+    for tag, peak in (("pct_bf16", PEAK_BF16), ("pct_int8", PEAK_INT8)):
+        floor = max(flops / peak, t_m, t_l)
+        out[tag] = (floor / dt_s) if dt_s > 0 else 0.0
+    return out
+
+
 def load_artifacts(art_dir: str):
     arts = []
     for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):

@@ -140,6 +140,7 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
                             lr=0.05, mom=0.75, dr_bits: int = 8,
                             n_shards: int | None = None, wire_bits: int = 16,
                             grad_sync: str = "int_ring",
+                            wire_codec: str = "packed",
                             opt_shard: str = "replicated"):
     """DP×TP shard_map training step over a ("data", "model") mesh.
 
@@ -153,6 +154,11 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
       grad_sync: "int_ring" (integer wire, DP-invariant) or "psum" (XLA
         fp32 all-reduce baseline — the thing the jaxpr tests prove the
         int_ring path does NOT contain).
+      wire_codec: "packed" (wire_sync_tree: one stacked pmax, fused
+        pre-sum, single double-buffered ring whose int8 hops pack
+        two-per-int16 — DESIGN.md §13) or "leaf" (per-leaf
+        wire_sync_mean rings — the pre-codec wire, kept for the
+        train/wire_codec bench comparison).  Bitwise-identical results.
       opt_shard: "replicated" | "zero1" (Momentum accumulator sharded over
         data as flat chunks; requires tp == 1; see launch/shard.py).
 
@@ -171,7 +177,7 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
     from repro.compat import SHARD_MAP_KW as _SM_KW
     from repro.compat import shard_map as _shard_map
     from repro.launch import shard as S
-    from repro.runtime.compress import wire_sync_mean
+    from repro.runtime.compress import wire_sync_mean, wire_sync_tree
 
     dp, tp = S.mesh_dims(mesh)
     if getattr(model, "tp_size", 1) != tp:
@@ -185,11 +191,16 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
     vs_local = n_shards // dp
     lrq = fixed_point_lr(lr, qcfg)
 
-    def sync_leaf(g):
-        if grad_sync == "int_ring":
-            return wire_sync_mean(g, "data", n_shards=n_shards, n_dev=dp,
-                                  bits=wire_bits)
-        return lax.pmean(jnp.mean(g, axis=0), "data")   # f32-wire baseline
+    def sync_grads(grads):
+        if grad_sync != "int_ring":                     # f32-wire baseline
+            return jax.tree.map(
+                lambda g: lax.pmean(jnp.mean(g, axis=0), "data"), grads)
+        if wire_codec == "packed":
+            return wire_sync_tree(grads, "data", n_shards=n_shards,
+                                  n_dev=dp, bits=wire_bits)
+        return jax.tree.map(                            # per-leaf rings
+            lambda g: wire_sync_mean(g, "data", n_shards=n_shards,
+                                     n_dev=dp, bits=wire_bits), grads)
 
     def body(params, opt_state, batch, step_idx):
         key = jax.random.fold_in(jax.random.PRNGKey(SEED), step_idx)
@@ -214,7 +225,7 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
         # program a single-device run would, keeping per-shard f32 reduction
         # shapes layout-independent — the bit-exactness contract needs that
         losses, grads = lax.map(per_vshard, vb)
-        grads = jax.tree.map(sync_leaf, grads)
+        grads = sync_grads(grads)
         loss = lax.pmean(jnp.mean(losses), "data")
         okey = jax.random.fold_in(key, 1)
         if opt_shard == "zero1":
@@ -444,6 +455,12 @@ def main(argv=None):
                    help="integer wire width for sharded gradient sync")
     p.add_argument("--grad-sync", default="int_ring",
                    choices=["int_ring", "psum"])
+    p.add_argument("--wire-codec", default="packed",
+                   choices=["packed", "leaf"],
+                   help="int_ring codec: 'packed' = whole-tree sync (one "
+                        "stacked pmax, fused pre-sum, double-buffered ring "
+                        "with two-per-int16 hops at 8-bit); 'leaf' = "
+                        "per-leaf rings (pre-codec wire)")
     p.add_argument("--opt-shard", default="replicated",
                    choices=["replicated", "zero1"])
     p.add_argument("--elastic", action="store_true",
@@ -518,14 +535,15 @@ def main(argv=None):
         raw_step, specs = make_sharded_train_step(
             model, qcfg, labels_tree, mesh, params, lr=args.lr,
             n_shards=args.n_shards or None, wire_bits=args.wire_bits,
-            grad_sync=args.grad_sync, opt_shard=args.opt_shard)
+            grad_sync=args.grad_sync, wire_codec=args.wire_codec,
+            opt_shard=args.opt_shard)
         step_fn = jax.jit(raw_step, donate_argnums=(0, 1))
         params = S.shard_arrays(mesh, params, specs["params"])
         opt = S.shard_arrays(mesh, opt, specs["opt"])
         print(f"[shard] mesh dp={args.dp} tp={args.tp} "
               f"n_shards={args.n_shards or args.dp} "
               f"wire={args.grad_sync}:{args.wire_bits}b "
-              f"opt={args.opt_shard}")
+              f"codec={args.wire_codec} opt={args.opt_shard}")
     else:
         opt = init_momentum(params)
         step_fn = jax.jit(make_train_step(model, qcfg, labels_tree,

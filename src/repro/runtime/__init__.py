@@ -1,10 +1,13 @@
-from .compress import (compressed_psum_int, ring_allreduce_int,
-                       ring_reduce_scatter_int, wire_limit, wire_quantize,
-                       wire_shift, wire_sync_mean)
+from .compress import (compressed_psum_int, pack_int8_pairs,
+                       ring_allreduce_int, ring_reduce_scatter_int,
+                       unpack_int16_pairs, wire_limit, wire_presum,
+                       wire_quantize, wire_shift, wire_sync_mean,
+                       wire_sync_tree)
 from .elastic import ElasticRunner, next_divisor_down
 from .fault import StepWatchdog, TrainRunner, SimulatedFailure
 
-__all__ = ["compressed_psum_int", "ring_allreduce_int",
-           "ring_reduce_scatter_int", "wire_limit", "wire_quantize",
-           "wire_shift", "wire_sync_mean", "StepWatchdog", "TrainRunner",
+__all__ = ["compressed_psum_int", "pack_int8_pairs", "ring_allreduce_int",
+           "ring_reduce_scatter_int", "unpack_int16_pairs", "wire_limit",
+           "wire_presum", "wire_quantize", "wire_shift", "wire_sync_mean",
+           "wire_sync_tree", "StepWatchdog", "TrainRunner",
            "SimulatedFailure", "ElasticRunner", "next_divisor_down"]

@@ -26,14 +26,19 @@ Two layers of API:
   outer wrappers (`compressed_psum_int`, `ring_reduce_scatter_int`) own
   their shard_map — drop-in collectives for replicated callers.
 
-  in-body primitives (`ring_allreduce_int`, `wire_sync_mean`) run INSIDE an
-  enclosing shard_map (the sharded training step, launch/train.py): the
-  caller already holds per-device values and an axis name.  `wire_sync_mean`
-  is the DP-invariant gradient sync (DESIGN.md §9): payload rounding happens
-  per VIRTUAL shard against a globally pmax'ed pow2 scale with a shift
-  derived from the STATIC shard count, and every cross-device reduction is
-  an exact integer sum — so the result is bitwise independent of how the
-  virtual shards are laid out over devices.
+  in-body primitives (`ring_allreduce_int`, `wire_sync_mean`,
+  `wire_sync_tree`) run INSIDE an enclosing shard_map (the sharded training
+  step, launch/train.py): the caller already holds per-device values and an
+  axis name.  `wire_sync_mean` is the per-leaf DP-invariant gradient sync
+  (DESIGN.md §9): payload rounding happens per VIRTUAL shard against a
+  globally pmax'ed pow2 scale with a shift derived from the STATIC shard
+  count, and every cross-device reduction is an exact integer sum — so the
+  result is bitwise independent of how the virtual shards are laid out over
+  devices.  `wire_sync_tree` is the same algorithm restructured for
+  wall-clock (DESIGN.md §13): one stacked pmax for all leaves, the payload
+  round/clip fused into the local pre-sum, and a single double-buffered
+  ring over the concatenated pre-sums whose int8 hops pack two-per-int16 —
+  bitwise identical outputs, a fraction of the collectives.
 """
 from __future__ import annotations
 
@@ -71,14 +76,8 @@ def wire_limit(bits: int, shift: int) -> float:
     return 2.0 ** (bits - 1 - shift) - 1.0
 
 
-def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
-    """Decompose gradient chunks into the integer wire QTensor.
-
-    scale = pow2_ceil(amax) * 2^(1 - bits + shift): the pre-shift keeps
-    n-way partial sums inside the wire width (payloads clip to
-    `wire_limit(bits, shift)`, so the bound holds even at the
-    saturate-at-pow2-amax corner).  `amax` must already be the global max
-    across participating shards (pmax'ed by the caller).
+def _clip_limit_f32(bits: int, shift: int) -> np.float32:
+    """wire_limit as an f32 clip bound that never exceeds the true bound.
 
     The clip runs in f32, where wide limits (bits=32) are not exactly
     representable — 2^30 - 1 would round UP to 2^30 and let payloads
@@ -89,10 +88,74 @@ def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
     limf = np.float32(lim)
     if float(limf) > lim:                  # f32 rounded up: step back one ulp
         limf = np.nextafter(limf, np.float32(0.0), dtype=np.float32)
+    return limf
+
+
+def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
+    """Decompose gradient chunks into the integer wire QTensor.
+
+    scale = pow2_ceil(amax) * 2^(1 - bits + shift): the pre-shift keeps
+    n-way partial sums inside the wire width (payloads clip to
+    `wire_limit(bits, shift)`, so the bound holds even at the
+    saturate-at-pow2-amax corner).  `amax` must already be the global max
+    across participating shards (pmax'ed by the caller).
+    """
+    limf = _clip_limit_f32(bits, shift)
     scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
     data = jnp.clip(jnp.round(chunks / scale), -limf,
                     limf).astype(payload_dtype(bits))
     return QTensor(data, scale, bits)
+
+
+def wire_presum(g, amax, bits: int, shift: int):
+    """Fused payload round/clip + local pre-sum — no payload tensor.
+
+    Same grid and clip as `wire_quantize` over g: (vs_local, *shape), but
+    the per-shard integer payloads are summed over axis 0 IN the producing
+    expression: round and clip feed the reduction directly, so no
+    (vs_local, *shape) integer tensor is ever materialized (XLA fuses
+    elementwise producers into reductions; the jaxpr acceptance test in
+    tests/test_sharded_train.py checks no such tensor exists).
+
+    Exactness: rounded/clipped payloads are integers with magnitude
+    <= 2^(bits-1-shift), and summing up to 2^shift of them stays below
+    2^(bits-1).  For bits <= 16 that is < 2^24, exactly representable in
+    f32, so the f32 accumulation equals the integer sum bit for bit.
+    Wider wires can pass 2^24, where f32 addition rounds — those sum the
+    materialized int32 payload instead (same values, exact by dtype).
+
+    Returns (int32 pre-sum of shape g.shape[1:], pow2 wire scale).
+    """
+    limf = _clip_limit_f32(bits, shift)
+    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
+    vals = jnp.clip(jnp.round(g / scale), -limf, limf)
+    if bits > 16:
+        return jnp.sum(vals.astype(jnp.int32), axis=0), scale
+    return jnp.sum(vals, axis=0).astype(jnp.int32), scale
+
+
+def pack_int8_pairs(x):
+    """Pack consecutive int8 pairs two-per-int16 (the wire-bits=8 codec).
+
+    x: (..., 2m) int8 -> (..., m) int16 with element i carrying
+    (x[2i] in the low byte, x[2i+1] in the high byte).  The low byte rides
+    as its two's-complement bit pattern (uint8 view), so every value
+    including -128 round-trips exactly through `unpack_int16_pairs`.
+    """
+    lo = x[..., 0::2].astype(jnp.uint8).astype(jnp.int16)
+    hi = x[..., 1::2].astype(jnp.int16) << 8
+    return hi | lo
+
+
+def unpack_int16_pairs(p):
+    """Inverse of `pack_int8_pairs`: (..., m) int16 -> (..., 2m) int8.
+
+    Low byte recovers through the uint8 view (wrap-on-cast restores the
+    sign, -128 included); high byte through an arithmetic shift.
+    """
+    lo = (p & 0xFF).astype(jnp.uint8).astype(jnp.int8)
+    hi = (p >> 8).astype(jnp.int8)
+    return jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (-1,))
 
 
 def _ring_reduce_scatter(qt: QTensor, axis_name, n):
@@ -177,7 +240,8 @@ def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
 # --------------------------------------------------------------------------
 
 
-def ring_allreduce_int(x, axis_name: str, n: int, bits: int):
+def ring_allreduce_int(x, axis_name: str, n: int, bits: int, *,
+                       pack: bool = False, buckets: int = 1):
     """Exact integer all-reduce-sum of per-device int32 contributions.
 
     Ring reduce-scatter (messages in the `bits`-wide wire dtype) followed by
@@ -185,23 +249,48 @@ def ring_allreduce_int(x, axis_name: str, n: int, bits: int):
     wire width — the contract `wire_quantize` establishes via its shift/clip
     — so the per-hop dtype cast never wraps and the sum is exact.  Must run
     inside shard_map with `axis_name` manual; `n` is the axis size.
+
+    pack (wire-bits=8 only): consecutive int8 payload pairs ride
+    two-per-int16, halving each hop's on-wire message element count —
+    pack/unpack is a lossless bit-pattern transform, so the sum is
+    unchanged.  buckets=2 double-buffers the ring: each chunk splits in
+    two and BOTH buckets' ppermutes are issued before either received
+    message is consumed, so a hop's send overlaps the other bucket's
+    accumulate (and gives the compiler two in-flight transfers to overlap
+    with whatever compute surrounds the sync).  Bucket order is restored
+    before the all-gather — the reduced values are identical for any
+    bucket count.
     """
+    assert not (pack and bits != 8), "pair packing is the 8-bit wire codec"
     dtype = payload_dtype(bits)
     shape = x.shape
     flat = x.reshape(-1)
-    pad = -flat.size % n
+    unit = n * buckets * (2 if pack else 1)
+    pad = -flat.size % unit
     flat = jnp.pad(flat, (0, pad))
-    chunks = flat.reshape(n, -1)
+    chunks = flat.reshape(n, buckets, -1)   # chunk r = buckets row-slices
     idx = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
-    acc = jnp.take(chunks, (idx - 1) % n, axis=0).astype(jnp.int32)
+    start = jnp.take(chunks, (idx - 1) % n, axis=0).astype(jnp.int32)
+    accs = tuple(start[b] for b in range(buckets))
 
-    def hop(i, acc):
-        msg = lax.ppermute(acc.astype(dtype), axis_name, perm)
-        k = (idx - 2 - i) % n
-        return msg.astype(jnp.int32) + jnp.take(chunks, k, axis=0)
+    def to_wire(a):
+        a = a.astype(dtype)
+        return pack_int8_pairs(a) if pack else a
 
-    acc = lax.fori_loop(0, n - 1, hop, acc) if n > 1 else acc
+    def from_wire(m):
+        return (unpack_int16_pairs(m) if pack else m).astype(jnp.int32)
+
+    def hop(i, accs):
+        # double-buffered: every bucket's ppermute is issued before any
+        # received message feeds an add
+        msgs = [lax.ppermute(to_wire(a), axis_name, perm) for a in accs]
+        nxt = jnp.take(chunks, (idx - 2 - i) % n, axis=0)
+        return tuple(from_wire(m) + nxt[b] for b, m in enumerate(msgs))
+
+    accs = lax.fori_loop(0, n - 1, hop, accs) if n > 1 else accs
+    acc = (jnp.concatenate([a.reshape(-1) for a in accs])
+           if buckets > 1 else accs[0].reshape(-1))
     full = lax.all_gather(acc, axis_name, axis=0).reshape(-1)
     full = full[: flat.size - pad] if pad else full
     return full.reshape(shape)
@@ -230,3 +319,54 @@ def wire_sync_mean(g, axis_name: str, *, n_shards: int, n_dev: int,
     local = jnp.sum(qt.data.astype(jnp.int32), axis=0)
     total = ring_allreduce_int(local, axis_name, n_dev, bits)
     return total.astype(jnp.float32) * qt.scale / n_shards
+
+
+def wire_sync_tree(grads, axis_name: str, *, n_shards: int, n_dev: int,
+                   bits: int = 16):
+    """Whole-tree integer-wire gradient sync — the packed wire codec.
+
+    Value-identical to mapping `wire_sync_mean` over the tree (same amax,
+    same grid, same exact integer sums — tests prove bitwise equality),
+    but shaped for wall-clock instead of per-leaf dispatch:
+
+      * ONE stacked scale reduction: every leaf's local amax pmaxes in a
+        single (n_leaves,)-shaped collective instead of n_leaves scalar
+        pmaxes (pmax is elementwise, so each lane equals its scalar run).
+      * fused pre-sum (`wire_presum`): each leaf's payload round/clip
+        feeds its local shard-sum directly — no per-shard integer payload
+        tensor is materialized.
+      * ONE ring: the int32 pre-sums concatenate into a flat buffer that
+        rides a single double-buffered ring + all-gather — 2(n_dev-1)
+        ppermutes and one gather per STEP, not per leaf.  At wire-bits=8
+        the hop messages pack two-per-int16 (`pack_int8_pairs`), halving
+        the on-wire element count.
+
+    grads: pytree of (vs_local, *shape) f32 per-virtual-shard sums.
+    Returns the matching pytree of (*shape,) f32 means over all
+    `n_shards` virtual shards.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    if not leaves:
+        return grads
+    shift = wire_shift(n_shards)
+    amax = lax.pmax(
+        jnp.stack([jnp.max(jnp.abs(g)) for g in leaves]), axis_name)
+    presums, scales, shapes = [], [], []
+    for i, g in enumerate(leaves):
+        ps, scale = wire_presum(g, amax[i], bits, shift)
+        presums.append(ps.reshape(-1))
+        scales.append(scale)
+        shapes.append(ps.shape)
+    flat = (jnp.concatenate(presums) if len(presums) > 1 else presums[0])
+    total = ring_allreduce_int(flat, axis_name, n_dev, bits,
+                               pack=(bits == 8),
+                               buckets=2 if n_dev > 1 else 1)
+    outs, off = [], 0
+    for shape, scale in zip(shapes, scales):
+        size = int(np.prod(shape)) if shape else 1
+        seg = total[off:off + size]
+        # same float expression as wire_sync_mean -> bitwise-equal means
+        outs.append((seg.astype(jnp.float32) * scale
+                     / n_shards).reshape(shape))
+        off += size
+    return jax.tree.unflatten(treedef, outs)

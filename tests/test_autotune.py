@@ -1,0 +1,232 @@
+"""Autotuner cache + integer wire-codec unit tests (DESIGN.md §13).
+
+Two contracts under test:
+
+  * the block-shape autotuner is an ACCELERATOR, never a dependency — a
+    missing, corrupt, truncated, or wrong-schema cache entry degrades to
+    the op's shipped defaults silently, and a tuned entry can change
+    wall-clock but not one output bit (tiles are blocking-only knobs);
+
+  * the wire codec's int8 pair packing is a lossless bit-pattern
+    transform — every int8 value (including -128) round-trips exactly
+    through the two-per-int16 wire format.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.runtime.compress import pack_int8_pairs, unpack_int16_pairs
+
+
+@pytest.fixture()
+def tuned_dir(tmp_path, monkeypatch):
+    """Point the cache at a throwaway dir; memo cleared on both sides so a
+    test can simulate a fresh process by calling clear_memo itself."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune.clear_memo()
+    yield str(tmp_path)
+    autotune.clear_memo()
+
+
+# --------------------------------------------------------------------------
+# cache mechanics
+# --------------------------------------------------------------------------
+
+
+def test_cache_roundtrip_survives_restart(tuned_dir):
+    sig = ((64, 64), "int8", (64, 64), "int8", False)
+    tiles = {"bm": 256, "bn": 128, "bk": 256}
+    autotune.store("qmatmul", sig, tiles, 12.5)
+    assert autotune.lookup("qmatmul", sig) == tiles
+    # new process == empty memo; the entry must come back from disk
+    autotune.clear_memo()
+    assert autotune.lookup("qmatmul", sig) == tiles
+    assert autotune.tiles_for("qmatmul", sig,
+                              {"bm": 128, "bn": 128, "bk": 256}) == tiles
+    es = autotune.entries()
+    assert len(es) == 1 and es[0]["op"] == "qmatmul"
+    assert es[0]["us"] == 12.5
+
+
+def test_corrupt_or_truncated_entry_falls_back_to_defaults(tuned_dir):
+    sig = ((64, 64), "int8", (64, 64), "int8", False)
+    defaults = {"bm": 128, "bn": 128, "bk": 256}
+    key = autotune.cache_key("qmatmul", sig)
+    path = os.path.join(tuned_dir, key + ".json")
+
+    for garbage in ("not json at all", '{"schema": 1, "op": "qmatm',
+                    '{"schema": 99, "op": "qmatmul", "tiles": {"bm": 1}}',
+                    '{"schema": 1, "op": "qmatmul", "tiles": [1, 2]}'):
+        with open(path, "w") as f:
+            f.write(garbage)
+        autotune.clear_memo()
+        assert autotune.lookup("qmatmul", sig) is None
+        assert autotune.tiles_for("qmatmul", sig, dict(defaults)) == defaults
+    # entries() skips the broken file rather than raising
+    assert autotune.entries() == []
+    # and a missing cache dir is also just a miss
+    autotune.clear_memo()
+    os.remove(path)
+    assert autotune.tiles_for("qmatmul", sig, dict(defaults)) == defaults
+
+
+def test_cache_key_sensitivity(tuned_dir, monkeypatch):
+    sig = ((64, 64), "int8", (64, 64), "int8", False)
+    base = autotune.cache_key("qmatmul", sig)
+    # shape, dtype, static flag, and op all invalidate
+    assert autotune.cache_key("qmatmul",
+                              ((64, 128), "int8", (64, 64), "int8",
+                               False)) != base
+    assert autotune.cache_key("qmatmul",
+                              ((64, 64), "int16", (64, 64), "int8",
+                               False)) != base
+    assert autotune.cache_key("qmatmul",
+                              ((64, 64), "int8", (64, 64), "int8",
+                               True)) != base
+    assert autotune.cache_key("dgrad", sig) != base
+    # a different backend never reads this backend's timings
+    monkeypatch.setattr(autotune.jax, "default_backend", lambda: "not-cpu")
+    assert autotune.cache_key("qmatmul", sig) != base
+    # tuple/list spelling of a shape is the same key (JSON canonical form)
+    monkeypatch.undo()
+    assert autotune.cache_key(
+        "qmatmul", ([64, 64], "int8", [64, 64], "int8", False)) == base
+
+
+def test_stale_entry_cannot_inject_unknown_kwargs(tuned_dir):
+    sig = ((32, 32), "rms")
+    autotune.store("ubn_norm", sig, {"bt": 64, "legacy_knob": 7}, 1.0)
+    autotune.clear_memo()
+    got = autotune.tiles_for("ubn_norm", sig, {"bt": 128})
+    assert got == {"bt": 64}  # only knobs the defaults name come through
+
+
+def test_tune_skips_failing_candidates_and_persists_winner(tuned_dir):
+    calls = []
+
+    def call(tiles):
+        calls.append(dict(tiles))
+        if tiles.get("explode"):
+            raise RuntimeError("tile too large for shape")
+        return jnp.zeros((4,))
+
+    won = autotune.tune("qmatmul", ("sig",), call,
+                        candidates=({"explode": True}, {"bm": 64}), reps=1)
+    assert won == {"bm": 64}
+    assert {"explode": True} in calls          # it was attempted
+    autotune.clear_memo()
+    assert autotune.lookup("qmatmul", ("sig",)) == {"bm": 64}
+    with pytest.raises(RuntimeError):
+        autotune.tune("qmatmul", ("s2",), call,
+                      candidates=({"explode": True},), reps=1)
+
+
+def test_ds_tuple_round_trips_through_json(tuned_dir):
+    autotune.store("flash_attention", ("warm", "default"),
+                   {"ds": ("arbitrary", "arbitrary")}, 0.0)
+    autotune.clear_memo()
+    got = autotune.tiles_for("flash_attention", ("warm", "default"),
+                             {"ds": ("parallel", "arbitrary")})
+    assert got == {"ds": ("arbitrary", "arbitrary")}
+    assert isinstance(got["ds"], tuple)  # pallas wants a tuple, not a list
+
+
+def test_banner_and_report_surface(tuned_dir):
+    assert autotune.banner_fragment() == "tiles=defaults"
+    assert autotune.report_rows() == []
+    autotune.store("qmatmul", ("s",), {"bm": 256, "bn": 128, "bk": 256}, 3.0)
+    autotune.store("ubn_norm", ("s",), {"bt": 64}, 2.0)
+    frag = autotune.banner_fragment()
+    assert frag.startswith("tiles=") and "qmatmul:" in frag
+    assert "bm=256" in frag and "ubn_norm:bt=64" in frag
+    ops_listed = [r[0] for r in autotune.report_rows()]
+    assert ops_listed == ["qmatmul", "ubn_norm"]
+
+
+# --------------------------------------------------------------------------
+# tuned tiles are numerics-neutral (bit-identity through the dispatch)
+# --------------------------------------------------------------------------
+
+
+def _store_all(op, sig, tiles):
+    autotune.store(op, sig, tiles, 1.0)
+    autotune.clear_memo()
+
+
+def test_tuned_qmatmul_bit_identical_to_defaults(tuned_dir):
+    rng = np.random.default_rng(0)
+    a8 = jnp.asarray(rng.integers(-127, 128, (160, 96)), jnp.int8)
+    b8 = jnp.asarray(rng.integers(-127, 128, (96, 80)), jnp.int8)
+    want = np.asarray(ops.qmatmul_op(a8, b8, force_kernel=True))  # defaults
+    sig = (a8.shape, "int8", b8.shape, "int8", False)
+    for tiles in ({"bm": 64, "bn": 32, "bk": 32},
+                  {"bm": 256, "bn": 256, "bk": 128}):
+        _store_all("qmatmul", sig, tiles)
+        got = np.asarray(ops.qmatmul_op(a8, b8, force_kernel=True))
+        np.testing.assert_array_equal(got, want)
+    # and the oracle route (what CPU actually executes) agrees too
+    np.testing.assert_array_equal(np.asarray(ops.qmatmul_op(a8, b8)), want)
+
+
+def test_tuned_ubn_bit_identical_and_clamped_to_fit(tuned_dir):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((96, 64)), jnp.float32)
+    gamma = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    want = [np.asarray(o) for o in
+            ops.ubn_norm_op(x, gamma, kind="rms", force_kernel=True)]
+    # a tuned bt beyond the VMEM-fit heuristic must clamp, not crash: store
+    # an absurd tile and a small one, both must reproduce the default bits
+    for bt in (8192, 16):
+        _store_all("ubn_norm", (x.shape, "rms"), {"bt": bt})
+        got = ops.ubn_norm_op(x, gamma, kind="rms", force_kernel=True)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_warm_fast_populates_every_op(tuned_dir):
+    won = autotune.warm(fast=True, verbose=False)
+    assert set(won) == set(autotune.CANDIDATES)
+    es = autotune.entries()
+    assert {e["op"] for e in es} == set(autotune.CANDIDATES)
+    # a fresh process resolves the warmed qmatmul entry through tiles_for
+    autotune.clear_memo()
+    sig = ((128, 128), "int8", (128, 128), "int8", False)
+    tuned = autotune.tiles_for("qmatmul", sig,
+                               {"bm": 128, "bn": 128, "bk": 256})
+    assert tuned in autotune.CANDIDATES["qmatmul"][:2]
+    assert autotune.banner_fragment() != "tiles=defaults"
+
+
+# --------------------------------------------------------------------------
+# wire codec: int8 pair packing
+# --------------------------------------------------------------------------
+
+
+def test_pack_roundtrip_every_int8_value():
+    x = jnp.asarray(np.arange(-128, 128, dtype=np.int8))
+    p = pack_int8_pairs(x)
+    assert p.dtype == jnp.int16 and p.shape == (128,)
+    np.testing.assert_array_equal(np.asarray(unpack_int16_pairs(p)),
+                                  np.asarray(x))
+
+
+def test_pack_roundtrip_random_batched():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.integers(-128, 128, (3, 5, 64)), jnp.int8)
+    p = pack_int8_pairs(x)
+    assert p.shape == (3, 5, 32)
+    np.testing.assert_array_equal(np.asarray(unpack_int16_pairs(p)),
+                                  np.asarray(x))
+
+
+def test_pack_layout_is_little_endian_pairs():
+    # element i of the wire word carries (x[2i] low byte, x[2i+1] high)
+    x = jnp.asarray([1, 2, -128, 127], jnp.int8)
+    p = np.asarray(pack_int8_pairs(x))
+    assert p[0] == (2 << 8) | 1
+    assert np.int16(p[1]) == np.int16((127 << 8) | 0x80)

@@ -106,6 +106,15 @@ _SWEEP_PROG = _PRELUDE + textwrap.dedent("""
     pb, _, _ = train("lm", "full8", dp=8, wire_bits=8)
     assert not diff(pa, pb)
     print("OK lm wire8")
+    # packed whole-tree codec == per-leaf codec, bitwise (params AND the
+    # Momentum accumulator), at the 16-bit and the packed 8-bit wire
+    pc, oc, _ = train("lm", "full8", dp=4)
+    pd, od, _ = train("lm", "full8", dp=4, wire_codec="leaf")
+    assert not (diff(pc, pd) + diff(oc.acc, od.acc))
+    pe, _, _ = train("lm", "full8", dp=2, wire_bits=8)
+    pf, _, _ = train("lm", "full8", dp=2, wire_bits=8, wire_codec="leaf")
+    assert not diff(pe, pf)
+    print("OK codec packed==leaf")
     print("SWEEP_OK")
 """)
 
@@ -158,13 +167,15 @@ _LOSS_CURVE_PROG = _PRELUDE + textwrap.dedent("""
 
 _JAXPR_PROG = _PRELUDE + textwrap.dedent("""
     # Integer-wire acceptance on the traced step: gradients cross devices
-    # as integer payloads ONLY.  Scalar float collectives are the wire's
-    # pmax'ed scale and the loss-metric mean; everything tensor-shaped on
-    # the wire (ppermute hops, all_gathers) must be integer dtype.  The
-    # f32 "psum" baseline is the positive control for the detector.
+    # as integer payloads ONLY.  With the packed codec, float collectives
+    # are ONE 1-D pmax (every leaf's wire-scale amax, stacked) plus the
+    # scalar loss-metric mean; the leaf codec keeps every float collective
+    # scalar.  Everything tensor-shaped on the wire (ppermute hops,
+    # all_gathers) must be integer dtype.  The f32 "psum" baseline is the
+    # positive control for the detector.
     from repro.kernels import ops
 
-    def trace(grad_sync):
+    def trace(grad_sync, wire_codec="packed", wire_bits=16):
         a = ARCHS["lm"]
         mesh = make_cpu_mesh(4, 1)
         qcfg = preset("full8", "native")
@@ -173,25 +184,63 @@ _JAXPR_PROG = _PRELUDE + textwrap.dedent("""
         opt = init_momentum(params)
         step_raw, _ = make_sharded_train_step(
             model, qcfg, model.labels(params), mesh, params, n_shards=8,
-            grad_sync=grad_sync)
+            grad_sync=grad_sync, wire_codec=wire_codec,
+            wire_bits=wire_bits)
         batch = jax.tree.map(jnp.asarray, task_for("lm", a).batch(0))
-        return jax.make_jaxpr(step_raw)(params, opt, batch, jnp.int32(0))
+        jx = jax.make_jaxpr(step_raw)(params, opt, batch, jnp.int32(0))
+        return jx, params
 
-    colls = ops.collective_eqns(trace("int_ring").jaxpr)
+    jx, params = trace("int_ring")
+    n_leaves = len(jax.tree.leaves(params))
+    colls = ops.collective_eqns(jx.jaxpr)
     assert colls, "no collectives found — detector broken?"
     floats = [c for c in colls if c[2] is not None
               and jnp.issubdtype(c[2], jnp.floating)]
-    assert all(c[1] == () for c in floats), \\
-        [c for c in floats if c[1] != ()]
+    vec = [c for c in floats if c[1] != ()]
+    assert len(vec) == 1 and vec[0][0] == "pmax" \\
+        and vec[0][1] == (n_leaves,), vec
     wires = [c for c in colls if c[0] in ("ppermute", "all_gather")]
     assert wires and all(jnp.issubdtype(c[2], jnp.integer) for c in wires), \\
         wires
     assert any(c[0] == "ppermute" and c[2] == jnp.int16 for c in colls)
 
+    # leaf codec: per-leaf sync keeps every float collective SCALAR, and
+    # rings once per leaf where the packed codec rings once per step with
+    # two double-buffered messages
+    jl, _ = trace("int_ring", wire_codec="leaf")
+    lc = ops.collective_eqns(jl.jaxpr)
+    lf = [c for c in lc if c[2] is not None
+          and jnp.issubdtype(c[2], jnp.floating)]
+    assert all(c[1] == () for c in lf), [c for c in lf if c[1] != ()]
+    pp = sum(1 for c in colls if c[0] == "ppermute")
+    pl = sum(1 for c in lc if c[0] == "ppermute")
+    assert (pp, pl) == (2, n_leaves), (pp, pl)
+
+    # wire-bits=8: the packed hops ride two-per-int16 — exactly half the
+    # on-wire elements of the per-leaf int8 hops — and the fused pre-sum
+    # never materializes a per-virtual-shard int8 payload tensor (the
+    # leaf codec does: positive control for the detector)
+    vs = 8 // 4
+    leaf_shapes = {(vs,) + np.shape(l) for l in jax.tree.leaves(params)}
+    def int8_vs_tensors(j):
+        return [e for e in ops.eqns_outside_pallas(j.jaxpr)
+                if e[2] is not None and e[2] == jnp.int8
+                and e[1] in leaf_shapes]
+    def hop_elems(j):
+        return sum(int(np.prod(c[1])) for c in ops.collective_eqns(j.jaxpr)
+                   if c[0] == "ppermute")
+    j8p, _ = trace("int_ring", wire_bits=8)
+    j8l, _ = trace("int_ring", wire_codec="leaf", wire_bits=8)
+    assert not int8_vs_tensors(j8p), int8_vs_tensors(j8p)[:4]
+    assert int8_vs_tensors(j8l), "positive control lost its payload tensors"
+    hp, hl = hop_elems(j8p), hop_elems(j8l)
+    assert hp * 2 == hl, (hp, hl)
+
     # positive control: the f32-wire baseline DOES all-reduce float tensors
-    base = ops.collective_eqns(trace("psum").jaxpr)
+    base, _ = trace("psum")
+    bc = ops.collective_eqns(base.jaxpr)
     assert any(c[0] == "psum" and c[1] != ()
-               and jnp.issubdtype(c[2], jnp.floating) for c in base)
+               and jnp.issubdtype(c[2], jnp.floating) for c in bc)
     print("JAXPR_OK")
 """)
 
