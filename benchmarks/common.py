@@ -7,6 +7,7 @@ arithmetic token task).  Scale knobs: REPRO_BENCH_STEPS / REPRO_BENCH_FAST.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
@@ -17,10 +18,10 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import preset
 from repro.core.qconfig import QConfig
-from repro.data import ImageTask, TokenTask
-from repro.launch.train import make_train_step
+from repro.data import ImageTask, TokenTask, resolve_image_task
+from repro.launch.train import make_sharded_train_step, make_train_step
 from repro.models import build_model
-from repro.optim import init_momentum
+from repro.optim import dr_bits_schedule, init_momentum
 
 
 def steps_default(n: int) -> int:
@@ -38,28 +39,98 @@ LM_BENCH = ArchConfig(name="lm-bench", family="lm", n_layers=2, d_model=64,
                       q_chunk=32, kv_chunk=32)
 
 
+def image_task(batch: int = 64, seed: int = 1):
+    """Benchmark image source: the real npz pipeline when REPRO_DATA_DIR is
+    set (synthetic fallback behind REPRO_SYNTHETIC_DATA=1), the synthetic
+    blob task otherwise.  Returns (task, tag) — stamp `data=tag` into rows.
+    """
+    return resolve_image_task(
+        batch, synthetic=bool(os.environ.get("REPRO_SYNTHETIC_DATA")),
+        img_size=RESNET_BENCH.img_size,
+        num_classes=RESNET_BENCH.num_classes, seed=seed)
+
+
+def resnet_arch_for(task) -> ArchConfig:
+    """RESNET_BENCH re-shaped to the task's geometry (real datasets may
+    differ from the 16px/8-class synthetic default)."""
+    return dataclasses.replace(RESNET_BENCH, num_classes=task.num_classes,
+                               img_size=task.img_size)
+
+
 def train_resnet(qcfg: QConfig, steps: int, batch: int = 64, lr: float = 0.05,
-                 seed: int = 0, eval_batches: int = 4):
-    model = build_model(RESNET_BENCH, qcfg)
+                 seed: int = 0, eval_batches: int = 4, task=None,
+                 dr_boundaries: tuple = ()):
+    task, tag = (task, "caller") if task is not None else image_task(batch)
+    model = build_model(resnet_arch_for(task), qcfg)
     params = model.init(jax.random.PRNGKey(seed))
     opt = init_momentum(params)
     labels = model.labels(params)
-    step_fn = jax.jit(make_train_step(model, qcfg, labels, lr=lr))
-    task = ImageTask(img_size=16, num_classes=8, global_batch=batch, seed=1)
+    # one jitted step per scheduled CQ dr width (static trace constant)
+    step_fns = {}
+
+    def fn_for(bits):
+        if bits not in step_fns:
+            step_fns[bits] = jax.jit(
+                make_train_step(model, qcfg, labels, lr=lr, dr_bits=bits))
+        return step_fns[bits]
+
     losses = []
     t0 = time.time()
     for s in range(steps):
         b = jax.tree.map(jnp.asarray, task.batch(s))
-        params, opt, m = step_fn(params, opt, b, jnp.int32(s))
+        fn = fn_for(dr_bits_schedule(s, dr_boundaries, base_bits=qcfg.k_gw))
+        params, opt, m = fn(params, opt, b, jnp.int32(s))
         losses.append(float(m["loss"]))
-    # held-out accuracy (fresh steps the model never trained on)
+    # held-out accuracy (val split / fresh synthetic steps)
     accs = []
     fwd = jax.jit(lambda p, b: model.loss(p, b)[1]["acc"])
-    for s in range(10_000, 10_000 + eval_batches):
-        b = jax.tree.map(jnp.asarray, task.batch(s))
+    for i in range(eval_batches):
+        b = jax.tree.map(jnp.asarray, task.holdout_batch(i))
         accs.append(float(fwd(params, b)))
     return {"losses": losses, "acc": float(np.mean(accs)),
-            "wall_s": time.time() - t0, "params": params, "model": model}
+            "wall_s": time.time() - t0, "params": params, "model": model,
+            "data": tag, "task": task}
+
+
+def train_resnet_sharded(qcfg: QConfig, steps: int, *, wire_bits: int,
+                         n_shards: int = 2, batch: int = 64,
+                         lr: float = 0.05, seed: int = 0,
+                         eval_batches: int = 4, task=None):
+    """train_resnet through the sharded step on a dp=1 mesh: the integer
+    wire's quantization numerics (per-virtual-shard rounding against the
+    pmax'ed scale at `wire_bits`, staged widening for sub-8 fan-ins) are
+    fully engaged without needing multiple devices — the wire-bits
+    sensitivity axis of table2."""
+    from repro.launch import shard as S
+    from repro.launch.mesh import make_cpu_mesh
+    from repro.launch.shard import put_batch
+
+    task, tag = (task, "caller") if task is not None else image_task(batch)
+    model = build_model(resnet_arch_for(task), qcfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = init_momentum(params)
+    labels = model.labels(params)
+    mesh = make_cpu_mesh(1, 1)
+    raw, specs = make_sharded_train_step(
+        model, qcfg, labels, mesh, params, lr=lr, n_shards=n_shards,
+        wire_bits=wire_bits, wire_codec="auto")
+    step_fn = jax.jit(raw)
+    params = S.shard_arrays(mesh, params, specs["params"])
+    opt = S.shard_arrays(mesh, opt, specs["opt"])
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        b = put_batch(mesh, task.batch(s))
+        params, opt, m = step_fn(params, opt, b, jnp.int32(s))
+        losses.append(float(m["loss"]))
+    accs = []
+    fwd = jax.jit(lambda p, b: model.loss(p, b)[1]["acc"])
+    for i in range(eval_batches):
+        b = jax.tree.map(jnp.asarray, task.holdout_batch(i))
+        accs.append(float(fwd(params, b)))
+    return {"losses": losses, "acc": float(np.mean(accs)),
+            "wall_s": time.time() - t0, "params": params, "model": model,
+            "data": tag, "task": task}
 
 
 def train_lm(qcfg: QConfig, steps: int, batch: int = 8, seq: int = 32,

@@ -1,9 +1,12 @@
-"""Paper Table I: vanilla FP32 vs full-8-bit WAGEUBN vs 16-bit-E2 WAGEUBN.
+"""Paper Table I: vanilla FP32 vs full-8-bit WAGEUBN vs 16-bit-E2 WAGEUBN,
+extended with the sub-8 / wide-gradient lanes (DESIGN.md §14).
 
-Protocol (scaled to this CPU): reduced ResNet on the learnable synthetic
-image task, identical data/steps/seeds across numeric configs; report
-held-out accuracy.  The paper's claim to validate: WAGEUBN trains large
-nets to accuracy *competitive with* FP32, with 16-bit E2 >= full 8-bit.
+Protocol (scaled to this CPU): reduced ResNet on the resolved image task —
+the real npz pipeline when REPRO_DATA_DIR is set, the learnable synthetic
+blobs otherwise — identical data/steps/seeds across numeric configs;
+report held-out accuracy.  The paper's claim to validate: WAGEUBN trains
+large nets to accuracy *competitive with* FP32, with 16-bit E2 >= full
+8-bit; the lanes show how far below 8 bits each path degrades.
 """
 from __future__ import annotations
 
@@ -15,17 +18,23 @@ from .common import emit, steps_default, train_resnet
 def main() -> dict:
     steps = steps_default(120)
     out = {}
+    task = None
+    data = "?"
     for name, qcfg in [("fp32", preset("fp32")),
                        ("wageubn-e2-16", preset("e2_16", "sim")),
-                       ("wageubn-full8", preset("full8", "sim"))]:
-        r = train_resnet(qcfg, steps)
+                       ("wageubn-full8", preset("full8", "sim")),
+                       ("wageubn-w4a8", preset("w4a8", "sim")),
+                       ("wageubn-a4", preset("a4", "sim")),
+                       ("wageubn-g16", preset("g16", "sim"))]:
+        r = train_resnet(qcfg, steps, task=task)
+        if task is None:              # resolve once, share across configs
+            task, data = r["task"], r["data"]
         out[name] = r["acc"]
         emit(f"table1/{name}", r["wall_s"] / steps * 1e6,
-             f"holdout_acc={r['acc']:.4f}")
-    gap8 = out["fp32"] - out["wageubn-full8"]
-    gap16 = out["fp32"] - out["wageubn-e2-16"]
-    emit("table1/gap-full8", 0.0, f"acc_gap_vs_fp32={gap8:.4f}")
-    emit("table1/gap-e2-16", 0.0, f"acc_gap_vs_fp32={gap16:.4f}")
+             f"holdout_acc={r['acc']:.4f} data={data}")
+    for name in ("full8", "w4a8", "a4", "g16", "e2-16"):
+        gap = out["fp32"] - out[f"wageubn-{name}"]
+        emit(f"table1/gap-{name}", 0.0, f"acc_gap_vs_fp32={gap:.4f}")
     return out
 
 

@@ -1,40 +1,76 @@
 """Paper Table II: single-path quantization sensitivity on the WAGEUBN
-framework (quantize exactly ONE of W/A/BN/G/E1/E2 to 8-bit with the FP32
-update path, everything else fp32)."""
+framework — quantize exactly ONE of W/A/BN/G/E1/E2 with the FP32 update
+path, everything else fp32 — swept over bit widths.
+
+Two axes beyond the paper's 8-bit column:
+  * per-path width: every swept path also runs at k=4 (rows table2/kW=4,
+    table2/kA=4, ...) — the sub-8 lanes (DESIGN.md §14) through the same
+    registry quantizers (BN stays 8-wide: Eq. 13 needs the 16-bit stats);
+  * gradient wire: table2/wire={16,8,4} trains fp32 numerics through the
+    sharded step's integer wire on a 1-device mesh (n_shards=2 virtual
+    shards), so the ONLY quantizer in the run is the wire itself —
+    wire=4 exercises the staged int16-hop widening of compress.wire_plan.
+
+Rows carry data=<real:...|synthetic> from the resolved input pipeline.
+"""
 from __future__ import annotations
 
 from repro.core import preset
 
-from .common import emit, steps_default, train_resnet
+from .common import emit, steps_default, train_resnet, train_resnet_sharded
 
 OFF = dict(quant_w=False, quant_a=False, quant_bn=False, quant_g=False,
            quant_e1=False, quant_e2=False, quant_u=False)
 
-RUNS = {
-    "kW=8": dict(quant_w=True),
-    "kBN=8": dict(quant_bn=True),
-    "kA=8": dict(quant_a=True),
-    "kGW=8": dict(quant_g=True),
-    "kE1=8": dict(quant_e1=True),
-    "kE2=8": dict(quant_e2=True),
+# path label -> (enable switch, width field); each runs at k in SWEEP_BITS
+PATHS = {
+    "kW": ("quant_w", "k_w"),
+    "kA": ("quant_a", "k_a"),
+    "kGW": ("quant_g", "k_gw"),
+    "kE1": ("quant_e1", "k_e1"),
+    "kE2": ("quant_e2", "k_e2"),
 }
+SWEEP_BITS = (8, 4)
+WIRE_BITS = (16, 8, 4)
 
 
 def main() -> dict:
     steps = steps_default(100)
     base = train_resnet(preset("fp32"), steps)
+    data = base["data"]
+    task = base["task"]           # share one resolved pipeline across runs
     emit("table2/fp32", base["wall_s"] / steps * 1e6,
-         f"holdout_acc={base['acc']:.4f}")
+         f"holdout_acc={base['acc']:.4f} data={data}")
     out = {"fp32": base["acc"]}
-    for name, on in RUNS.items():
-        # Table II's kBN=8 run narrows the norm widths to 8
-        qcfg = preset("full8", "sim").replace(**{**OFF, **on})
-        if name == "kBN=8":
-            qcfg = qcfg.replace(k_bn=8, k_mu=8, k_sigma=8)
-        r = train_resnet(qcfg, steps)
+
+    # Table II's kBN run narrows the norm widths (stats stay 16b elsewhere)
+    qbn = preset("full8", "sim").replace(
+        **{**OFF, "quant_bn": True, "k_bn": 8, "k_mu": 8, "k_sigma": 8})
+    r = train_resnet(qbn, steps, task=task)
+    out["kBN=8"] = r["acc"]
+    emit("table2/kBN=8", r["wall_s"] / steps * 1e6,
+         f"holdout_acc={r['acc']:.4f} delta={r['acc']-base['acc']:+.4f} "
+         f"data={data}")
+
+    for path, (switch, width) in PATHS.items():
+        for bits in SWEEP_BITS:
+            qcfg = preset("full8", "sim").replace(
+                **{**OFF, switch: True, width: bits})
+            r = train_resnet(qcfg, steps, task=task)
+            name = f"{path}={bits}"
+            out[name] = r["acc"]
+            emit(f"table2/{name}", r["wall_s"] / steps * 1e6,
+                 f"holdout_acc={r['acc']:.4f} "
+                 f"delta={r['acc']-base['acc']:+.4f} data={data}")
+
+    for bits in WIRE_BITS:
+        r = train_resnet_sharded(preset("fp32"), steps, wire_bits=bits,
+                                 n_shards=2, task=task)
+        name = f"wire={bits}"
         out[name] = r["acc"]
         emit(f"table2/{name}", r["wall_s"] / steps * 1e6,
-             f"holdout_acc={r['acc']:.4f} delta={r['acc']-base['acc']:+.4f}")
+             f"holdout_acc={r['acc']:.4f} "
+             f"delta={r['acc']-base['acc']:+.4f} data={data}")
     return out
 
 

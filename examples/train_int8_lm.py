@@ -34,11 +34,12 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.core import preset
+from repro.core.qconfig import PRESETS
 from repro.data import TokenTask
 from repro.data.synthetic import Prefetcher
 from repro.launch.train import make_train_step
 from repro.models import build_model
-from repro.optim import dr_bits_schedule, init_momentum
+from repro.optim import dr_bits_schedule, init_momentum, parse_boundaries
 from repro.runtime import StepWatchdog, TrainRunner
 
 
@@ -52,7 +53,11 @@ def main():
     p.add_argument("--batch", type=int, default=16)
     p.add_argument("--vocab", type=int, default=512)
     p.add_argument("--preset", default="full8",
-                   choices=["full8", "e2_16", "fp32"])
+                   choices=sorted(PRESETS))
+    p.add_argument("--dr-boundaries", default="",
+                   help="comma-separated steps where the CQ dr width "
+                        "shrinks by one bit (paper's epoch schedule); "
+                        "default: steps/2,3*steps/4")
     p.add_argument("--mode", default="sim", choices=["sim", "native"],
                    help="native: activations/weights flow as int8 QTensors "
                         "into the integer matmul kernels")
@@ -115,10 +120,12 @@ def main():
         return
 
     opt = init_momentum(params)
-    # dr shrinks like the paper's epoch schedule (k: 8 -> 7 -> 6)
-    boundaries = (args.steps // 2, 3 * args.steps // 4)
+    # dr shrinks like the paper's epoch schedule (k_gw -> k_gw-1 -> ...)
+    boundaries = (parse_boundaries(args.dr_boundaries)
+                  or (args.steps // 2, 3 * args.steps // 4))
     step_fns = {b: jax.jit(make_train_step(
-        model, qcfg, labels, dr_bits=dr_bits_schedule(b, boundaries)))
+        model, qcfg, labels,
+        dr_bits=dr_bits_schedule(b, boundaries, base_bits=qcfg.k_gw)))
         for b in (0,) + boundaries}
 
     prefetch = Prefetcher(lambda s: task.batch(s), depth=2)

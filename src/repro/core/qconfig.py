@@ -69,7 +69,11 @@ class QConfig:
     e_attn_kind: str | None = None
 
     # --- gradient / optimizer widths ---
-    k_gw: int = 8            # dr bits of CQ (shrinks during training)
+    # dr bits of CQ: the BASE of the shrink schedule (paper §III-C, k 8->7
+    # ->...).  optim/momentum resolves the per-step value as
+    # dr_bits_schedule(step, boundaries, base_bits=k_gw) — train drivers
+    # plumb the boundaries via --dr-boundaries.
+    k_gw: int = 8
     k_gc: int = 15           # constant scale bits of CQ
     k_ggamma: int = 15
     k_gbeta: int = 15
@@ -196,7 +200,17 @@ FULL8 = QConfig()                                   # paper full 8-bit version
 E2_16 = QConfig(e2_kind="sq16", k_e2=16)            # paper 16-bit E2 version
 FP32 = QConfig(mode="fp32")                         # vanilla baseline
 
-PRESETS = {"full8": FULL8, "e2_16": E2_16, "fp32": FP32}
+# Bit-width-lane spec points (DESIGN.md §14): per-path widths re-width the
+# registry specs through __post_init__, so each lane is the same quantizer
+# kind at a different k — and rides every fused-kernel / sharding contract.
+W4A8 = QConfig(k_w=4)      # DoReFa-style 4-bit weights: clip@4, fixed 2^-3
+                           # grid, int8 storage with a 4-bit clip
+A4 = QConfig(k_a=4)        # 4-bit activations: scaled@4 (amax pow2 scale)
+G16 = QConfig(k_gw=16)     # wide CQ range: dr = 2^15 on int16 payloads —
+                           # the base the --dr-boundaries schedule shrinks
+
+PRESETS = {"full8": FULL8, "e2_16": E2_16, "fp32": FP32,
+           "w4a8": W4A8, "a4": A4, "g16": G16}
 
 
 def preset(name: str, mode: str | None = None) -> QConfig:

@@ -1,4 +1,6 @@
+from .imagenet import NpzImageTask, resolve_image_task, write_demo_dataset
 from .synthetic import (TokenTask, ImageTask, make_global_batch,
                         host_local_slice)
 
-__all__ = ["TokenTask", "ImageTask", "make_global_batch", "host_local_slice"]
+__all__ = ["TokenTask", "ImageTask", "NpzImageTask", "make_global_batch",
+           "host_local_slice", "resolve_image_task", "write_demo_dataset"]

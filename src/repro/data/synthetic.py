@@ -82,6 +82,11 @@ class ImageTask:
                 ).astype(np.float32)
         return {"images": imgs, "labels": labels}
 
+    def holdout_batch(self, i: int) -> dict:
+        """Held-out eval batches: fresh steps the model never trains on —
+        the same protocol NpzImageTask serves from its val split."""
+        return self.batch(10_000 + i)
+
 
 def make_global_batch(host_batch: dict, mesh, pspec_tree) -> dict:
     """Place a host batch onto the mesh with the given PartitionSpecs.

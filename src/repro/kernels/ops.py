@@ -363,6 +363,9 @@ def dispatch_report(cfg=None) -> dict:
            "ops": {name: route for name in OPS}}
     rep["autotune"] = {"entries": len(autotune.entries()),
                        "dir": autotune.cache_dir()}
+    from repro.runtime.compress import default_wire_codec
+    codec, why = default_wire_codec(rep["backend"])
+    rep["wire_codec"] = {"default": codec, "why": why}
     if cfg is not None:
         rep["mode"] = cfg.mode
         rep["fused"] = bool(cfg.native and getattr(cfg, "fuse_kernels", True))
@@ -379,6 +382,8 @@ def dispatch_banner(cfg=None) -> str:
         fused = "fused" if rep["fused"] else "unfused"
         line += f" mode={rep['mode']} bwd/ubn={fused} attn={fused}"
     line += " " + autotune.banner_fragment()
+    wc = rep["wire_codec"]
+    line += f" wire_codec={wc['default']} ({wc['why']})"
     return line
 
 

@@ -85,6 +85,8 @@ def kernel_table() -> str:
         r = dispatch_report(preset("full8", mode))
         rows.append(f"| {mode} | {'fused' if r['fused'] else 'unfused'} |")
     tuned = autotune.report_rows()
+    wc = rep["wire_codec"]
+    rows += ["", f"wire codec default: {wc['default']} — {wc['why']}"]
     rows += ["", f"autotune cache: {rep['autotune']['entries']} entries "
                  f"({rep['autotune']['dir']})"]
     if tuned:

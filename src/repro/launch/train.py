@@ -28,16 +28,21 @@ from repro.configs import get as get_arch
 from repro.core.qconfig import preset
 from repro.models import build_model
 from repro.optim import (apply_leaf_update, dr_bits_schedule, fixed_point_lr,
-                         init_momentum, momentum_update, quantize_grad_leaf)
+                         init_momentum, momentum_update, parse_boundaries,
+                         quantize_grad_leaf)
 
 SEED = 17
 
 
 def make_train_step(model, qcfg, labels_tree, lr=0.05, mom=0.75,
-                    dr_bits: int = 8, n_micro: int = 1):
+                    dr_bits: int | None = None, n_micro: int = 1):
     """n_micro > 1 accumulates gradients over microbatches (lax.scan) —
     activation memory scales down by n_micro while the numeric result is
-    the mean-of-microbatch gradients (the paper's G of the full batch)."""
+    the mean-of-microbatch gradients (the paper's G of the full batch).
+
+    dr_bits: static CQ range width for this trace (None = qcfg.k_gw, the
+    schedule base) — drivers with --dr-boundaries build one step fn per
+    scheduled width."""
     lrq = fixed_point_lr(lr, qcfg)
 
     def train_step(params, opt_state, batch, step_idx):
@@ -137,7 +142,7 @@ def _zero1_update(cfg, params, grads, state, labels, key, lr, mom, dr_bits,
 
 
 def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
-                            lr=0.05, mom=0.75, dr_bits: int = 8,
+                            lr=0.05, mom=0.75, dr_bits: int | None = None,
                             n_shards: int | None = None, wire_bits: int = 16,
                             grad_sync: str = "int_ring",
                             wire_codec: str = "packed",
@@ -150,7 +155,9 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
         partition specs; pass the tree you will train.
       n_shards: virtual batch shards (quantization granularity).  Default
         dp.  Must be a multiple of dp; the global batch must divide by it.
-      wire_bits: integer wire width for gradient sync (8/16/32).
+      wire_bits: integer wire width for gradient sync (4/8/16/32).  Sub-8
+        widths at fan-ins past the classic bound ride staged int16 hops
+        (runtime/compress.wire_plan) with the same exact-sum guarantee.
       grad_sync: "int_ring" (integer wire, DP-invariant) or "psum" (XLA
         fp32 all-reduce baseline — the thing the jaxpr tests prove the
         int_ring path does NOT contain).
@@ -158,7 +165,9 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
         pre-sum, single double-buffered ring whose int8 hops pack
         two-per-int16 — DESIGN.md §13) or "leaf" (per-leaf
         wire_sync_mean rings — the pre-codec wire, kept for the
-        train/wire_codec bench comparison).  Bitwise-identical results.
+        train/wire_codec bench comparison); "auto" picks per backend
+        (runtime/compress.default_wire_codec: packed on TPU, leaf on CPU
+        where XLA serializes ppermutes).  Bitwise-identical results.
       opt_shard: "replicated" | "zero1" (Momentum accumulator sharded over
         data as flat chunks; requires tp == 1; see launch/shard.py).
 
@@ -177,8 +186,11 @@ def make_sharded_train_step(model, qcfg, labels_tree, mesh, params, *,
     from repro.compat import SHARD_MAP_KW as _SM_KW
     from repro.compat import shard_map as _shard_map
     from repro.launch import shard as S
-    from repro.runtime.compress import wire_sync_mean, wire_sync_tree
+    from repro.runtime.compress import (default_wire_codec, wire_sync_mean,
+                                        wire_sync_tree)
 
+    if wire_codec == "auto":
+        wire_codec, _ = default_wire_codec()
     dp, tp = S.mesh_dims(mesh)
     if getattr(model, "tp_size", 1) != tp:
         raise ValueError(f"model.tp_size={getattr(model, 'tp_size', 1)} "
@@ -430,9 +442,10 @@ def make_prefill(model, shape_name):
 
 def main(argv=None):
     p = argparse.ArgumentParser("repro.launch.train")
+    from repro.core.qconfig import PRESETS
     p.add_argument("--arch", required=True)
     p.add_argument("--preset", default="full8",
-                   choices=["full8", "e2_16", "fp32"])
+                   choices=sorted(PRESETS))
     p.add_argument("--mode", default="sim", choices=["fp32", "sim", "native"])
     p.add_argument("--steps", type=int, default=50)
     p.add_argument("--batch", type=int, default=8)
@@ -451,16 +464,23 @@ def main(argv=None):
                    help="virtual batch shards (quantization granularity); "
                         "0 = dp")
     p.add_argument("--wire-bits", type=int, default=16,
-                   choices=[8, 16, 32],
-                   help="integer wire width for sharded gradient sync")
+                   choices=[4, 8, 16, 32],
+                   help="integer wire width for sharded gradient sync "
+                        "(sub-8 widths stage onto int16 hops past the "
+                        "classic fan-in bound)")
     p.add_argument("--grad-sync", default="int_ring",
                    choices=["int_ring", "psum"])
-    p.add_argument("--wire-codec", default="packed",
-                   choices=["packed", "leaf"],
+    p.add_argument("--wire-codec", default="auto",
+                   choices=["auto", "packed", "leaf"],
                    help="int_ring codec: 'packed' = whole-tree sync (one "
                         "stacked pmax, fused pre-sum, double-buffered ring "
                         "with two-per-int16 hops at 8-bit); 'leaf' = "
-                        "per-leaf rings (pre-codec wire)")
+                        "per-leaf rings (pre-codec wire); 'auto' = packed "
+                        "on TPU, leaf on CPU (serialized-ppermute caveat)")
+    p.add_argument("--dr-boundaries", default="",
+                   help="comma-separated steps where CQ's dr width shrinks "
+                        "one bit (paper §III-C), e.g. '30,40'; base width "
+                        "is the preset's k_gw")
     p.add_argument("--opt-shard", default="replicated",
                    choices=["replicated", "zero1"])
     p.add_argument("--elastic", action="store_true",
@@ -483,6 +503,14 @@ def main(argv=None):
     qcfg = preset(args.preset, args.mode if args.preset != "fp32" else None)
     from repro.kernels.ops import dispatch_banner
     print(dispatch_banner(qcfg))
+    from repro.runtime.compress import default_wire_codec
+    if args.wire_codec == "auto":
+        codec, codec_why = default_wire_codec()
+    else:
+        codec, codec_why = args.wire_codec, "forced by --wire-codec"
+    bounds = parse_boundaries(args.dr_boundaries)
+    if bounds and args.elastic:
+        p.error("--dr-boundaries is not supported under --elastic yet")
     sharded = args.dp * args.tp > 1
     model = build_model(acfg, qcfg, tp_size=args.tp if sharded else 1)
 
@@ -526,29 +554,47 @@ def main(argv=None):
               f"({rep['ratio']:.2f}x)")
         return
 
+    # one jitted step fn per scheduled dr width (dr_bits is a static trace
+    # constant); with no --dr-boundaries this dict holds exactly one entry
+    step_fns: dict[int, object] = {}
     if sharded:
         from repro.launch import shard as S
         from repro.launch.mesh import make_cpu_mesh
         mesh = make_cpu_mesh(args.dp, args.tp)
         opt = (S.zero_init_momentum(params, args.dp)
                if args.opt_shard == "zero1" else init_momentum(params))
-        raw_step, specs = make_sharded_train_step(
+
+        def fn_for(bits):
+            if bits not in step_fns:
+                raw, _ = make_sharded_train_step(
+                    model, qcfg, labels_tree, mesh, params, lr=args.lr,
+                    dr_bits=bits, n_shards=args.n_shards or None,
+                    wire_bits=args.wire_bits, grad_sync=args.grad_sync,
+                    wire_codec=codec, opt_shard=args.opt_shard)
+                step_fns[bits] = jax.jit(raw, donate_argnums=(0, 1))
+            return step_fns[bits]
+
+        _, specs = make_sharded_train_step(
             model, qcfg, labels_tree, mesh, params, lr=args.lr,
             n_shards=args.n_shards or None, wire_bits=args.wire_bits,
-            grad_sync=args.grad_sync, wire_codec=args.wire_codec,
+            grad_sync=args.grad_sync, wire_codec=codec,
             opt_shard=args.opt_shard)
-        step_fn = jax.jit(raw_step, donate_argnums=(0, 1))
         params = S.shard_arrays(mesh, params, specs["params"])
         opt = S.shard_arrays(mesh, opt, specs["opt"])
         print(f"[shard] mesh dp={args.dp} tp={args.tp} "
               f"n_shards={args.n_shards or args.dp} "
               f"wire={args.grad_sync}:{args.wire_bits}b "
-              f"codec={args.wire_codec} opt={args.opt_shard}")
+              f"codec={codec} ({codec_why}) opt={args.opt_shard}")
     else:
         opt = init_momentum(params)
-        step_fn = jax.jit(make_train_step(model, qcfg, labels_tree,
-                                          lr=args.lr),
-                          donate_argnums=(0, 1))
+
+        def fn_for(bits):
+            if bits not in step_fns:
+                step_fns[bits] = jax.jit(
+                    make_train_step(model, qcfg, labels_tree, lr=args.lr,
+                                    dr_bits=bits),
+                    donate_argnums=(0, 1))
+            return step_fns[bits]
 
     ckpt = None
     start = 0
@@ -560,7 +606,14 @@ def main(argv=None):
             print(f"resumed from step {start}")
 
     t0 = time.time()
+    cur_bits = None
     for step in range(start, args.steps):
+        bits = dr_bits_schedule(step, bounds, base_bits=qcfg.k_gw)
+        if bits != cur_bits:
+            if bounds:
+                print(f"[dr] step {step}: CQ dr width -> {bits} bits")
+            cur_bits = bits
+        step_fn = fn_for(bits)
         if sharded:
             from repro.launch.shard import put_batch
             batch = put_batch(mesh, task.batch(step))

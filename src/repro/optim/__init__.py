@@ -1,7 +1,7 @@
 from .momentum import (MomentumState, apply_leaf_update, dr_bits_schedule,
                        fixed_point_lr, init_momentum, momentum_update,
-                       quantize_grad_leaf)
+                       parse_boundaries, quantize_grad_leaf)
 
 __all__ = ["MomentumState", "apply_leaf_update", "dr_bits_schedule",
            "fixed_point_lr", "init_momentum", "momentum_update",
-           "quantize_grad_leaf"]
+           "parse_boundaries", "quantize_grad_leaf"]

@@ -43,6 +43,11 @@ def fixed_point_lr(lr: float, cfg: QConfig) -> float:
 def dr_bits_schedule(step: int | jax.Array, boundaries=(), base_bits: int = 8):
     """dr = 2^(k-1) shrinks at step boundaries (paper §III-C: k 8 -> 7 ...).
 
+    `base_bits` is cfg.k_gw in the train drivers; with boundaries=() the
+    schedule is constant at the base (drivers plumb --dr-boundaries — see
+    parse_boundaries — and rebuild/re-select the step fn at each boundary,
+    since dr_bits is a static trace constant).
+
     Static python int when `step` is concrete; for traced steps the caller
     should pass the schedule value in as a static per-epoch constant.
     """
@@ -51,6 +56,11 @@ def dr_bits_schedule(step: int | jax.Array, boundaries=(), base_bits: int = 8):
         if step >= b:
             bits -= 1
     return max(bits, 2)
+
+
+def parse_boundaries(spec: str) -> tuple[int, ...]:
+    """--dr-boundaries CLI format: '200,400' -> (200, 400), '' -> ()."""
+    return tuple(int(s) for s in str(spec).split(",") if s.strip())
 
 
 def _grad_quantizer(cfg: QConfig, dr_bits: int):
@@ -92,7 +102,7 @@ def _plain_path(cfg: QConfig, lab) -> bool:
             or not (cfg.quant_g or cfg.quant_u))
 
 
-def quantize_grad_leaf(cfg: QConfig, g, lab, key, dr_bits: int = 8):
+def quantize_grad_leaf(cfg: QConfig, g, lab, key, dr_bits: int | None = None):
     """Per-leaf gradient quantization (Eq. 18): CQ for "w" leaves, direct
     15-bit for gamma/beta, identity for plain-path leaves.
 
@@ -103,6 +113,8 @@ def quantize_grad_leaf(cfg: QConfig, g, lab, key, dr_bits: int = 8):
     """
     if _plain_path(cfg, lab) or not cfg.quant_g:
         return g
+    if dr_bits is None:        # unscheduled callers: cfg.k_gw IS the dr width
+        dr_bits = cfg.k_gw
     if lab == "w":
         # registry-resolved gradient quantizer (cfg.g names kind, k_gc and
         # static params); the dr schedule and rounding mode are per-step
@@ -138,11 +150,12 @@ def apply_leaf_update(cfg: QConfig, p, gq, a, lab, lr, mom: float = 0.75):
 
 def momentum_update(cfg: QConfig, params: Any, grads: Any, state: MomentumState,
                     labels: Any, key: jax.Array, lr: float | jax.Array,
-                    mom: float = 0.75, dr_bits: int = 8):
+                    mom: float = 0.75, dr_bits: int | None = None):
     """One optimizer step.  Returns (new_params, new_state).
 
     `lr` must already be on the k_lr grid (see fixed_point_lr); `dr_bits` is
-    the (static) CQ range schedule value for this step.
+    the (static) CQ range schedule value for this step — None takes
+    cfg.k_gw, the schedule base.
     """
     leaves, treedef = jax.tree.flatten(params)
     glist = treedef.flatten_up_to(grads)

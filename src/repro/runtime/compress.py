@@ -21,6 +21,13 @@ width (tests/test_qtensor.py proves the bound by property for n <= 256).
 The discarded low bits are below CQ's own grid once divided by n —
 documented trade-off.
 
+Staged widening (`wire_plan`): when the fan-in bound fails (shift > bits-2,
+e.g. 4-bit wires at dp*n_shards >= 8), the payload keeps (nearly) full
+`bits`-bit resolution and the partial sums ride int16 hops instead — the
+exact-integer-sum guarantee is unchanged, only the hop dtype widens.  A
+hard error remains only when even int16 cannot carry the fan-in
+(shift > 14, i.e. > 16384-way sums).
+
 Two layers of API:
 
   outer wrappers (`compressed_psum_int`, `ring_reduce_scatter_int`) own
@@ -72,8 +79,38 @@ def wire_limit(bits: int, shift: int) -> float:
     if shift > bits - 2:
         raise ValueError(
             f"{bits}-bit wire cannot carry {2 ** shift}-way partial sums "
-            f"(need shift <= bits - 2 = {bits - 2}, got {shift})")
+            f"(need shift <= bits - 2 = {bits - 2}, got {shift}); "
+            f"wire_plan() stages such fan-ins onto int16 hops instead")
     return 2.0 ** (bits - 1 - shift) - 1.0
+
+
+def wire_plan(bits: int, shift: int) -> tuple[int, int]:
+    """Resolve how `bits`-bit payloads survive a 2^shift-way fan-in.
+
+    Returns (clip_shift, hop_bits):
+
+      classic   — shift <= bits - 2: the grid pre-shift is absorbed by the
+        payload clip (`wire_limit(bits, shift)`) and partial sums ride hops
+        of the payload width itself (hop_bits == bits).
+      staged widening — narrow wires at large fan-in (e.g. 4-bit payloads
+        summed 8-way) would otherwise clip every payload to zero.  Instead
+        the payload keeps full `bits`-bit resolution minus only what int16
+        cannot absorb (clip_shift = max(0, shift + bits - 16)) and the
+        partial sums ride int16 hops: |payload| <= 2^(bits-1-clip_shift)-1,
+        so any sum of up to 2^shift payloads is < 2^15 - exact on an int16
+        hop, and < 2^24 so the f32 pre-sum accumulation is also exact.
+
+    Raises only when int16 hops cannot carry the fan-in either
+    (clip_shift > bits - 2, i.e. shift > 14).
+    """
+    if shift <= bits - 2:
+        return shift, bits
+    clip_shift = max(0, shift + bits - 16)
+    if clip_shift > bits - 2:
+        raise ValueError(
+            f"{bits}-bit payloads cannot survive {2 ** shift}-way partial "
+            f"sums even on an int16 hop (needs shift <= 14, got {shift})")
+    return clip_shift, 16
 
 
 def _clip_limit_f32(bits: int, shift: int) -> np.float32:
@@ -94,14 +131,17 @@ def _clip_limit_f32(bits: int, shift: int) -> np.float32:
 def wire_quantize(chunks, amax, bits: int, shift: int) -> QTensor:
     """Decompose gradient chunks into the integer wire QTensor.
 
-    scale = pow2_ceil(amax) * 2^(1 - bits + shift): the pre-shift keeps
-    n-way partial sums inside the wire width (payloads clip to
-    `wire_limit(bits, shift)`, so the bound holds even at the
-    saturate-at-pow2-amax corner).  `amax` must already be the global max
-    across participating shards (pmax'ed by the caller).
+    scale = pow2_ceil(amax) * 2^(1 - bits + clip_shift): the effective
+    pre-shift (`wire_plan` — the full `shift` on the classic path, the
+    int16-staged remainder otherwise) keeps n-way partial sums inside the
+    HOP width (payloads clip to `wire_limit(bits, clip_shift)`, so the
+    bound holds even at the saturate-at-pow2-amax corner).  `amax` must
+    already be the global max across participating shards (pmax'ed by the
+    caller).
     """
-    limf = _clip_limit_f32(bits, shift)
-    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
+    clip_shift, _ = wire_plan(bits, shift)
+    limf = _clip_limit_f32(bits, clip_shift)
+    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + clip_shift)
     data = jnp.clip(jnp.round(chunks / scale), -limf,
                     limf).astype(payload_dtype(bits))
     return QTensor(data, scale, bits)
@@ -118,16 +158,18 @@ def wire_presum(g, amax, bits: int, shift: int):
     tests/test_sharded_train.py checks no such tensor exists).
 
     Exactness: rounded/clipped payloads are integers with magnitude
-    <= 2^(bits-1-shift), and summing up to 2^shift of them stays below
-    2^(bits-1).  For bits <= 16 that is < 2^24, exactly representable in
-    f32, so the f32 accumulation equals the integer sum bit for bit.
-    Wider wires can pass 2^24, where f32 addition rounds — those sum the
-    materialized int32 payload instead (same values, exact by dtype).
+    <= 2^(bits-1-clip_shift), and summing up to 2^shift of them stays
+    below 2^(hop_bits-1) (wire_plan's invariant, classic or staged).  For
+    bits <= 16 that is < 2^24, exactly representable in f32, so the f32
+    accumulation equals the integer sum bit for bit.  Wider wires can pass
+    2^24, where f32 addition rounds — those sum the materialized int32
+    payload instead (same values, exact by dtype).
 
     Returns (int32 pre-sum of shape g.shape[1:], pow2 wire scale).
     """
-    limf = _clip_limit_f32(bits, shift)
-    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + shift)
+    clip_shift, _ = wire_plan(bits, shift)
+    limf = _clip_limit_f32(bits, clip_shift)
+    scale = qf.pow2_ceil(amax) * 2.0 ** (1 - bits + clip_shift)
     vals = jnp.clip(jnp.round(g / scale), -limf, limf)
     if bits > 16:
         return jnp.sum(vals.astype(jnp.int32), axis=0), scale
@@ -158,18 +200,20 @@ def unpack_int16_pairs(p):
     return jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (-1,))
 
 
-def _ring_reduce_scatter(qt: QTensor, axis_name, n):
+def _ring_reduce_scatter(qt: QTensor, axis_name, n, hop_bits: int | None = None):
     """qt.data: (n, chunk) integer contributions per rank.
 
     Classic ring: rank r starts with its contribution to chunk (r-1)%n and
     after n-1 hops holds the fully reduced chunk r.  Every message on the
-    wire is the integer payload dtype (int8/int16), never fp32.
+    wire is the `hop_bits` integer dtype (default: the payload width;
+    staged widening passes 16 to carry sub-8 payload sums), never fp32.
     """
     x_int = qt.data
+    hop_bits = qt.k if hop_bits is None else hop_bits
     # clip in the int32 domain: float bounds near 2^31 are not exactly
     # representable in f32 and would promote the accumulator
-    lim = jnp.asarray(min(2 ** (qt.k - 1) - 1, 2 ** 31 - 1), jnp.int32)
-    dtype = x_int.dtype
+    lim = jnp.asarray(min(2 ** (hop_bits - 1) - 1, 2 ** 31 - 1), jnp.int32)
+    dtype = payload_dtype(hop_bits)
     idx = lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     acc = jnp.take(x_int, (idx - 1) % n, axis=0).astype(jnp.int32)
@@ -191,6 +235,7 @@ def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
     """
     n = mesh.shape[axis_name]
     shift = wire_shift(n)
+    _, hop_bits = wire_plan(bits, shift)
 
     def f(xl):
         flat = xl.reshape(-1)
@@ -199,7 +244,7 @@ def ring_reduce_scatter_int(x, mesh, axis_name: str, bits: int = 16):
         chunks = flat.reshape(n, -1)
         amax = lax.pmax(jnp.max(jnp.abs(chunks)), axis_name)
         qt = wire_quantize(chunks, amax, bits, shift)
-        acc = _ring_reduce_scatter(qt, axis_name, n)
+        acc = _ring_reduce_scatter(qt, axis_name, n, hop_bits)
         return acc.astype(jnp.float32) * qt.scale / n
 
     spec = P(*((None,) * x.ndim))
@@ -212,6 +257,7 @@ def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
     """integer-wire all-reduce mean = ring reduce-scatter + all-gather."""
     n = mesh.shape[axis_name]
     shift = wire_shift(n)
+    _, hop_bits = wire_plan(bits, shift)
 
     def f(xl):
         shape = xl.shape
@@ -221,7 +267,7 @@ def compressed_psum_int(x, mesh, axis_name: str, bits: int = 16):
         chunks = flat.reshape(n, -1)
         amax = lax.pmax(jnp.max(jnp.abs(chunks)), axis_name)
         qt = wire_quantize(chunks, amax, bits, shift)
-        acc = _ring_reduce_scatter(qt, axis_name, n)
+        acc = _ring_reduce_scatter(qt, axis_name, n, hop_bits)
         # all-gather the reduced chunks; rank i holds chunk i so rank order
         # IS chunk order
         gathered = lax.all_gather(acc, axis_name, axis=0)  # (n, chunk)
@@ -250,8 +296,11 @@ def ring_allreduce_int(x, axis_name: str, n: int, bits: int, *,
     — so the per-hop dtype cast never wraps and the sum is exact.  Must run
     inside shard_map with `axis_name` manual; `n` is the axis size.
 
-    pack (wire-bits=8 only): consecutive int8 payload pairs ride
-    two-per-int16, halving each hop's on-wire message element count —
+    `bits` is the HOP width — the payload width on the classic path,
+    16 when `wire_plan` staged a narrower payload onto int16 hops.
+
+    pack (int8-dtype hops, i.e. bits <= 8): consecutive int8 payload pairs
+    ride two-per-int16, halving each hop's on-wire message element count —
     pack/unpack is a lossless bit-pattern transform, so the sum is
     unchanged.  buckets=2 double-buffers the ring: each chunk splits in
     two and BOTH buckets' ppermutes are issued before either received
@@ -261,7 +310,7 @@ def ring_allreduce_int(x, axis_name: str, n: int, bits: int, *,
     before the all-gather — the reduced values are identical for any
     bucket count.
     """
-    assert not (pack and bits != 8), "pair packing is the 8-bit wire codec"
+    assert not (pack and bits > 8), "pair packing needs int8-dtype hops"
     dtype = payload_dtype(bits)
     shape = x.shape
     flat = x.reshape(-1)
@@ -314,10 +363,11 @@ def wire_sync_mean(g, axis_name: str, *, n_shards: int, n_dev: int,
     cannot change a single bit of the result.
     """
     shift = wire_shift(n_shards)
+    _, hop_bits = wire_plan(bits, shift)
     amax = lax.pmax(jnp.max(jnp.abs(g)), axis_name)
     qt = wire_quantize(g, amax, bits, shift)
     local = jnp.sum(qt.data.astype(jnp.int32), axis=0)
-    total = ring_allreduce_int(local, axis_name, n_dev, bits)
+    total = ring_allreduce_int(local, axis_name, n_dev, hop_bits)
     return total.astype(jnp.float32) * qt.scale / n_shards
 
 
@@ -349,6 +399,7 @@ def wire_sync_tree(grads, axis_name: str, *, n_shards: int, n_dev: int,
     if not leaves:
         return grads
     shift = wire_shift(n_shards)
+    _, hop_bits = wire_plan(bits, shift)
     amax = lax.pmax(
         jnp.stack([jnp.max(jnp.abs(g)) for g in leaves]), axis_name)
     presums, scales, shapes = [], [], []
@@ -358,8 +409,8 @@ def wire_sync_tree(grads, axis_name: str, *, n_shards: int, n_dev: int,
         scales.append(scale)
         shapes.append(ps.shape)
     flat = (jnp.concatenate(presums) if len(presums) > 1 else presums[0])
-    total = ring_allreduce_int(flat, axis_name, n_dev, bits,
-                               pack=(bits == 8),
+    total = ring_allreduce_int(flat, axis_name, n_dev, hop_bits,
+                               pack=(hop_bits <= 8),
                                buckets=2 if n_dev > 1 else 1)
     outs, off = [], 0
     for shape, scale in zip(shapes, scales):
@@ -370,3 +421,20 @@ def wire_sync_tree(grads, axis_name: str, *, n_shards: int, n_dev: int,
                      / n_shards).reshape(shape))
         off += size
     return jax.tree.unflatten(treedef, outs)
+
+
+def default_wire_codec(backend: str | None = None) -> tuple[str, str]:
+    """Backend-aware `--wire-codec auto` resolution.  Returns (codec, why).
+
+    The packed whole-tree codec halves on-wire elements and issues 2
+    ppermutes/step — a win where transfers are real DMAs (TPU) — but on the
+    CPU backend XLA serializes ppermutes, so the single big packed ring
+    wall-clocks SLOWER than per-leaf rings even as the wire work halves
+    (the measured PR 9 caveat, BENCH_train train/wire_codec).  Both codecs
+    are bitwise-identical, so the default can follow the backend freely.
+    """
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        return "packed", "tpu: 2x fewer on-wire elements, 2 ppermutes/step"
+    return "leaf", (f"{backend}: serialized ppermutes make the packed "
+                    "single-ring slower than per-leaf rings")

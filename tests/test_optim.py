@@ -103,3 +103,51 @@ def test_dr_schedule():
     assert dr_bits_schedule(0, (100, 200)) == 8
     assert dr_bits_schedule(150, (100, 200)) == 7
     assert dr_bits_schedule(250, (100, 200)) == 6
+
+
+def test_parse_boundaries():
+    from repro.optim import parse_boundaries
+    assert parse_boundaries("") == ()
+    assert parse_boundaries("200,400") == (200, 400)
+    assert parse_boundaries(" 60 , 90 ") == (60, 90)
+    # the base follows cfg.k_gw — the G16 lane's schedule starts at 16
+    from repro.optim import dr_bits_schedule
+    assert dr_bits_schedule(0, (100,), base_bits=16) == 16
+    assert dr_bits_schedule(150, (100,), base_bits=16) == 15
+    assert dr_bits_schedule(10 ** 9, tuple(range(100)), base_bits=8) == 2
+
+
+def test_dr_schedule_actually_steps():
+    """The --dr-boundaries plumbing contract: dr_bits=None resolves to
+    cfg.k_gw (NOT a hardcoded 8), and a scheduled width change really
+    alters the quantized gradient — the schedule is not a silent no-op."""
+    from repro.optim import quantize_grad_leaf
+
+    g = jax.random.normal(jax.random.PRNGKey(4), (64,)) * 1e-3
+    key = jax.random.PRNGKey(5)
+
+    # None == explicit cfg.k_gw, bitwise, for both the 8- and 16-bit bases
+    for pname in ("full8", "g16"):
+        cfg = preset(pname, "sim")
+        np.testing.assert_array_equal(
+            np.asarray(quantize_grad_leaf(cfg, g, "w", key)),
+            np.asarray(quantize_grad_leaf(cfg, g, "w", key,
+                                          dr_bits=cfg.k_gw)))
+
+    # a boundary crossing (dr_bits k -> k-1) changes the CQ output
+    cfg = preset("full8", "sim")
+    before = np.asarray(quantize_grad_leaf(cfg, g, "w", key, dr_bits=8))
+    after = np.asarray(quantize_grad_leaf(cfg, g, "w", key, dr_bits=7))
+    assert not np.array_equal(before, after)
+
+    # ...and threads through the full optimizer step the same way
+    params, labels, grads = _setup()
+    st = init_momentum(params)
+    p8 = momentum_update(cfg, params, grads, st, labels,
+                         jax.random.PRNGKey(6), 0.05, dr_bits=8)[0]
+    pn = momentum_update(cfg, params, grads, st, labels,
+                         jax.random.PRNGKey(6), 0.05)[0]
+    p7 = momentum_update(cfg, params, grads, st, labels,
+                         jax.random.PRNGKey(6), 0.05, dr_bits=7)[0]
+    np.testing.assert_array_equal(np.asarray(p8["w"]), np.asarray(pn["w"]))
+    assert not np.array_equal(np.asarray(p8["w"]), np.asarray(p7["w"]))

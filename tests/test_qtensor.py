@@ -468,29 +468,37 @@ def check_pow2_closure(kind, k, x):
 
 
 def check_wire_overflow(n, bits, x):
-    """n-way partial sums of wire payloads never exceed the wire width.
+    """n-way partial sums of wire payloads never exceed the HOP width.
 
-    wire_quantize clips payloads to wire_limit(bits, shift) with
-    shift = ceil(log2 n), so ANY subset sum of n contributions fits the
-    signed `bits`-wide dtype — the property the integer ring's per-hop
-    dtype cast relies on (runtime/compress.py).  Fan-ins the wire cannot
-    carry (n > 2^(bits-2)) must refuse loudly instead of zeroing payloads.
+    wire_quantize clips payloads to wire_limit(bits, clip_shift) where
+    (clip_shift, hop_bits) = wire_plan(bits, ceil(log2 n)): on the classic
+    path the clip absorbs the whole shift and hops ride the payload width;
+    past the classic bound (e.g. 4-bit wires at n >= 8) the payload keeps
+    (nearly) full k-bit resolution and the sums ride int16 hops instead —
+    either way ANY subset sum of n contributions fits the signed
+    `hop_bits`-wide dtype the ring casts to (runtime/compress.py).  Only
+    fan-ins even int16 cannot carry (shift > 14) refuse loudly.
     """
     from repro.runtime import wire_limit, wire_quantize, wire_shift
+    from repro.runtime.compress import wire_plan
     shift = wire_shift(n)
     if shift > bits - 2:
-        with pytest.raises(ValueError):
+        with pytest.raises(ValueError):       # classic bound still refuses
             wire_limit(bits, shift)
+    try:
+        clip_shift, hop_bits = wire_plan(bits, shift)
+    except ValueError:
+        assert shift > 14                     # > 16384-way: no staging left
         return
     chunks = jnp.stack([x * (i + 1) / n for i in range(n)])
     qt = wire_quantize(chunks, jnp.max(jnp.abs(chunks)), bits, shift)
-    lim = wire_limit(bits, shift)
-    assert n * lim < 2.0 ** (bits - 1)          # static bound
+    lim = wire_limit(bits, clip_shift)
+    assert n * lim < 2.0 ** (hop_bits - 1)      # static bound
     peak = np.abs(np.asarray(qt.data, np.int64)).max() if x.size else 0
     assert peak <= lim
     total = np.abs(np.asarray(qt.data, np.int64).sum(0)).max() \
         if x.size else 0
-    assert total < 2.0 ** (bits - 1)
+    assert total < 2.0 ** (hop_bits - 1)
     assert np.asarray(qt.data).dtype == (np.int8 if bits <= 8 else np.int16
                                          if bits <= 16 else np.int32)
 
@@ -529,10 +537,79 @@ def test_pow2_scale_closure_sweep():
 
 
 def test_wire_overflow_bound_sweep():
-    for n in (1, 2, 3, 8, 17, 64, 256):
-        for bits in (8, 16, 32):
+    for n in (1, 2, 3, 8, 17, 64, 256, 40000):
+        for bits in (4, 8, 16, 32):
             for x in _sweep_arrays()[:6]:
                 check_wire_overflow(n, bits, x)
+
+
+# Sub-8 lanes (DESIGN.md §14): every registered kind upholds its algebra at
+# k in {2, 4} — pow2 scale closure, projection/idempotence by family, and
+# int8 storage whose payloads respect the k-bit clip.
+
+_SUB8_KS = (2, 4)
+
+
+def check_payload_k_clip(kind, k, x):
+    """Sub-8 payloads live in int8 storage clipped to the k-bit range."""
+    q = get_quantizer(kind, k)
+    qt = q.quantize(x)
+    for plane, _ in qt.planes() if qt.lo is not None else [(qt.data, None)]:
+        assert np.asarray(plane).dtype == np.int8, (kind, k)
+        assert np.abs(np.asarray(plane, np.int64)).max(initial=0) \
+            <= 2 ** (k - 1) - 1, (kind, k)
+
+
+def test_registered_kinds_cover_sub8_sweep():
+    """The families swept below must cover the whole registry — a newly
+    registered kind fails here until it joins a sub-8 sweep."""
+    swept = {"direct", "clip", "scaled", "sq", "grid", "flag", "cq", "none"}
+    assert set(registered_quantizers()) <= swept
+
+
+def test_fixed_grid_kinds_sub8():
+    for kind in ("direct", "clip"):
+        for k in _SUB8_KS:
+            for x in _sweep_arrays():
+                check_idempotent_fixed(kind, k, x)
+                check_pow2_closure(kind, k, x)
+                check_payload_k_clip(kind, k, x)
+
+
+def test_amax_scaled_kinds_sub8():
+    hits = 0
+    for kind in ("scaled", "sq", "grid", "flag"):
+        for k in _SUB8_KS:
+            for x in _sweep_arrays():
+                hits += bool(check_idempotent_scaled(kind, k, x))
+                check_pow2_closure(kind, k, x)
+                check_payload_k_clip(kind, k, x)
+    assert hits > 8           # the law must actually be exercised
+
+
+def test_cq_sub8_dr_bits():
+    """CQ with a sub-8 dr: deterministic roundtrip matches qf.cq bit-exactly,
+    payloads bounded by dr-1 = 2^(dr_bits-1)-1 in int8 storage, scale stays
+    the constant 2^(1-k_gc)."""
+    for dr_bits in _SUB8_KS:
+        q = get_quantizer("cq", 15,
+                          (("dr_bits", dr_bits), ("stochastic", False)))
+        for x in _sweep_arrays():
+            qt = q.quantize(x)
+            assert np.asarray(qt.data).dtype == np.int8
+            assert np.abs(np.asarray(qt.data, np.int64)).max(initial=0) \
+                <= 2 ** (dr_bits - 1) - 1
+            assert float(qt.scale) == 2.0 ** (1 - 15)
+            np.testing.assert_array_equal(
+                np.asarray(q.dequantize(qt)),
+                np.asarray(qf.cq(x, None, dr_bits, 15, stochastic=False)))
+
+
+def test_none_kind_sub8_is_identity():
+    for k in _SUB8_KS:
+        q = get_quantizer("none", k)
+        for x in _sweep_arrays():
+            np.testing.assert_array_equal(np.asarray(q(x)), np.asarray(x))
 
 
 if HAVE_HYPOTHESIS:
@@ -557,7 +634,7 @@ if HAVE_HYPOTHESIS:
     def test_hyp_pow2_closure(x, kk):
         check_pow2_closure(*kk, x)
 
-    @given(_h_arrays(), st.integers(1, 256), st.sampled_from([8, 16, 32]))
+    @given(_h_arrays(), st.integers(1, 256), st.sampled_from([4, 8, 16, 32]))
     def test_hyp_wire_overflow(x, n, bits):
         check_wire_overflow(n, bits, x)
 

@@ -245,11 +245,48 @@ _JAXPR_PROG = _PRELUDE + textwrap.dedent("""
 """)
 
 
+_SUBBIT_SWEEP_PROG = _PRELUDE + textwrap.dedent("""
+    # Sub-8 lanes (DESIGN.md §14) ride the same DP-invariance contract:
+    # W4A8 / A4 / G16 sharded steps are bitwise layout-independent, and the
+    # 4-bit wire's staged int16 hops (compress.wire_plan — n_shards=8
+    # fan-in past the classic 4-bit bound) keep the exact-integer-sum
+    # guarantee.
+    for pname in ("w4a8", "a4", "g16"):
+        p1, o1, _ = train("lm", pname, dp=1)
+        p2, o2, _ = train("lm", pname, dp=2)
+        bad = diff(p1, p2) + diff(o1.acc, o2.acc)
+        assert not bad, (pname, bad)
+        print("OK lm", pname)
+    p1, o1, _ = train("resnet", "w4a8", dp=1)
+    p2, o2, _ = train("resnet", "w4a8", dp=2)
+    assert not (diff(p1, p2) + diff(o1.acc, o2.acc))
+    print("OK resnet w4a8")
+    # staged 4-bit wire: hops ride int16, payloads keep full 4-bit
+    # resolution; packed and leaf codecs stay bitwise-identical to each
+    # other AND to the single-device run
+    pa, _, _ = train("lm", "full8", dp=1, wire_bits=4)
+    pb, _, _ = train("lm", "full8", dp=2, wire_bits=4)
+    assert not diff(pa, pb)
+    pc, _, _ = train("lm", "w4a8", dp=1, wire_bits=4)
+    pd, _, _ = train("lm", "w4a8", dp=2, wire_bits=4, wire_codec="leaf")
+    assert not diff(pc, pd)
+    print("OK wire4 staged")
+    print("SUBBIT_OK")
+""")
+
+
 def test_dp_invariance_sweep():
     """1-dev vs 8-dev bit-exactness: full8 x e2_16 over lm/moe/resnet, plus
     the dp=2 mixed layout and the int8 wire."""
     out = _run(_SWEEP_PROG)
     assert "SWEEP_OK" in out, out
+
+
+def test_subbit_dp_invariance_sweep():
+    """W4A8/A4/G16 bitwise dp in {1,2}; staged 4-bit wire keeps the
+    contract under both codecs."""
+    out = _run(_SUBBIT_SWEEP_PROG)
+    assert "SUBBIT_OK" in out, out
 
 
 def test_tp_and_zero1_bitexact():

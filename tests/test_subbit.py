@@ -1,0 +1,247 @@
+"""Sub-8 bit-width lanes (DESIGN.md §14): preset spec points, the staged
+integer wire, fused-kernel bit-exactness at k < 8, the backend-aware wire
+codec default, and the real-data npz input pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import preset
+from repro.core.qconfig import PRESETS
+
+
+# --------------------------------------------------------------------------
+# lane presets: spec points through the width<->spec reconciliation
+# --------------------------------------------------------------------------
+
+
+def test_lane_presets_resolve():
+    w4a8 = preset("w4a8")
+    assert w4a8.k_w == 4 and w4a8.w.kind == "clip" and w4a8.w.k == 4
+    assert w4a8.k_a == 8 and w4a8.a.k == 8
+    a4 = preset("a4")
+    assert a4.k_a == 4 and a4.a.kind == "scaled" and a4.a.k == 4
+    assert a4.k_w == 8
+    g16 = preset("g16")
+    assert g16.k_gw == 16 and g16.k_w == 8
+    for name in PRESETS:          # every preset passes Eq. 22/24 closure
+        preset(name).validate()
+
+
+# --------------------------------------------------------------------------
+# wire_plan: classic clip vs staged int16 widening
+# --------------------------------------------------------------------------
+
+
+def test_wire_plan_units():
+    from repro.runtime.compress import wire_plan
+
+    # classic: the payload clip absorbs the whole shift, hops ride the
+    # payload width itself
+    assert wire_plan(16, 4) == (4, 16)
+    assert wire_plan(8, 6) == (6, 8)
+    assert wire_plan(32, 10) == (10, 32)
+    assert wire_plan(4, 2) == (2, 4)
+    # staged: narrow payloads keep (nearly) full resolution, sums widen
+    # onto int16 hops
+    assert wire_plan(4, 3) == (0, 16)
+    assert wire_plan(4, 12) == (0, 16)
+    assert wire_plan(8, 7) == (0, 16)
+    assert wire_plan(4, 13) == (1, 16)    # int16 can't absorb it all
+    assert wire_plan(4, 14) == (2, 16)
+    # refuse only when int16 hops can't carry the fan-in either
+    with pytest.raises(ValueError):
+        wire_plan(4, 15)
+    with pytest.raises(ValueError):
+        wire_plan(16, 15)
+
+
+def test_staged_wire_exact_sum():
+    """bits=4 at an 8-way fan-in (the case the classic bound rejects):
+    payloads keep full 4-bit resolution (|n| <= 7) in int8 storage, every
+    partial sum fits int16, and the fused pre-sum equals the materialized
+    payload sum bit for bit."""
+    from repro.runtime import wire_quantize
+    from repro.runtime.compress import wire_presum
+
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(8, 33)) * 1e-3, jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    qt = wire_quantize(g, amax, 4, 3)
+    data = np.asarray(qt.data)
+    assert data.dtype == np.int8
+    assert np.abs(data).max() <= 7              # full 4-bit resolution
+    assert np.abs(data.astype(np.int64).sum(0)).max() < 2 ** 15
+    ps, scale = wire_presum(g, amax, 4, 3)
+    np.testing.assert_array_equal(np.asarray(ps),
+                                  data.astype(np.int64).sum(0))
+    assert float(scale) == float(qt.scale)
+
+
+def test_default_wire_codec_backend_aware():
+    from repro.runtime.compress import default_wire_codec
+
+    codec, why = default_wire_codec("tpu")
+    assert codec == "packed" and "tpu" in why
+    codec, why = default_wire_codec("cpu")
+    assert codec == "leaf" and "cpu" in why
+    codec, _ = default_wire_codec()             # current backend resolves
+    assert codec in ("packed", "leaf")
+
+
+def test_banner_and_report_surface_codec():
+    from repro.kernels.ops import dispatch_banner, dispatch_report
+    from repro.launch.report import kernel_table
+
+    rep = dispatch_report()
+    assert rep["wire_codec"]["default"] in ("packed", "leaf")
+    assert rep["wire_codec"]["why"]
+    assert "wire_codec=" in dispatch_banner()
+    assert "wire codec default:" in kernel_table()
+
+
+# --------------------------------------------------------------------------
+# fused-kernel bit-exactness at k < 8 / k > 8
+# --------------------------------------------------------------------------
+
+_RN = ArchConfig(name="t-rn-lane", family="resnet", block="basic",
+                 stage_sizes=(1,), num_classes=8, img_size=16)
+
+
+@pytest.mark.parametrize("pname", ["w4a8", "a4", "g16"])
+def test_lane_fused_matches_unfused_train_step(pname):
+    """Two native train steps, fused vs unfused kernels: bitwise on every
+    param leaf and the Momentum accumulator (resnet — the whole tree rides
+    the quantized path)."""
+    from repro.data import ImageTask
+    from repro.launch.train import make_train_step
+    from repro.models import build_model
+    from repro.optim import init_momentum
+
+    outs = []
+    for fused in (True, False):
+        qcfg = preset(pname, "native").replace(fuse_kernels=fused)
+        model = build_model(_RN, qcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = init_momentum(params)
+        step = jax.jit(make_train_step(model, qcfg, model.labels(params)))
+        task = ImageTask(img_size=16, num_classes=8, global_batch=8)
+        for s in range(2):
+            b = jax.tree.map(jnp.asarray, task.batch(s))
+            params, opt, _ = step(params, opt, b, jnp.int32(s))
+        outs.append((jax.device_get(params), jax.device_get(opt.acc)))
+    for tree_f, tree_u in zip(outs[0], outs[1]):
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(tree_f),
+                jax.tree_util.tree_leaves_with_path(tree_u)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{pname}: {jax.tree_util.keystr(path)}")
+
+
+# --------------------------------------------------------------------------
+# real-data npz pipeline
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def demo_dir(tmp_path_factory):
+    from repro.data import write_demo_dataset
+
+    d = str(tmp_path_factory.mktemp("npz_demo"))
+    info = write_demo_dataset(d, n=512, img_size=8, num_classes=4, seed=3)
+    assert info["n_train"] == 448 and info["n_val"] == 64
+    return d
+
+
+def test_npz_task_grid_and_shapes(demo_dir):
+    from repro.data import NpzImageTask
+
+    t = NpzImageTask(demo_dir, global_batch=16, seed=5)
+    assert t.img_size == 8 and t.num_classes == 4 and t.n_train == 448
+    b = t.batch(0)
+    assert b["images"].shape == (16, 8, 8, 3)
+    assert b["labels"].dtype == np.int32
+    # pixels land EXACTLY on the signed 2^(1-8) grid in [-1, 1)
+    n = b["images"] * 128.0
+    np.testing.assert_array_equal(n, np.round(n))
+    assert n.min() >= -128 and n.max() <= 127
+
+
+def test_npz_task_shard_composition(demo_dir):
+    from repro.data import NpzImageTask
+
+    t = NpzImageTask(demo_dir, global_batch=16, seed=5)
+    full = t.batch(7)
+    parts = [t.batch(7, i, 4) for i in range(4)]
+    np.testing.assert_array_equal(
+        full["images"], np.concatenate([p["images"] for p in parts]))
+    np.testing.assert_array_equal(
+        full["labels"], np.concatenate([p["labels"] for p in parts]))
+    again = t.batch(7)                          # determinism
+    np.testing.assert_array_equal(full["images"], again["images"])
+
+
+def test_npz_task_epoch_permutation(demo_dir):
+    from repro.data import NpzImageTask
+
+    t = NpzImageTask(demo_dir, global_batch=16, seed=5, augment=False)
+    steps = t.n_train // 16
+    flat = np.concatenate([t.batch(s)["images"] for s in range(steps)]
+                          ).reshape(t.n_train, -1)
+    assert len(np.unique(flat, axis=0)) == t.n_train  # each sample once
+    # epoch 2: same sample set, different seed-fixed order
+    flat2 = np.concatenate([t.batch(steps + s)["images"]
+                            for s in range(steps)]).reshape(t.n_train, -1)
+    assert not np.array_equal(flat, flat2)
+    np.testing.assert_array_equal(flat[np.lexsort(flat.T)],
+                                  flat2[np.lexsort(flat2.T)])
+
+
+def test_npz_holdout_deterministic(demo_dir):
+    from repro.data import NpzImageTask
+
+    t = NpzImageTask(demo_dir, global_batch=16, seed=5)
+    a, b = t.holdout_batch(0), t.holdout_batch(0)
+    np.testing.assert_array_equal(a["images"], b["images"])
+    assert not np.array_equal(a["images"], t.holdout_batch(1)["images"])
+
+
+def test_npz_chw_layout(tmp_path):
+    """The downsampled-ImageNet/CIFAR batch layout: row-major CHW uint8
+    rows + 1-based labels load as NHWC with 0-based labels."""
+    from repro.data.imagenet import _load_npz
+
+    rng = np.random.default_rng(0)
+    imgs = rng.integers(0, 256, (10, 3, 6, 6), dtype=np.uint8)
+    labels = rng.integers(1, 5, 10)
+    p = str(tmp_path / "train_000.npz")
+    np.savez(p, data=imgs.reshape(10, -1), labels=labels)
+    out, lab = _load_npz(p)
+    np.testing.assert_array_equal(out, imgs.transpose(0, 2, 3, 1))
+    np.testing.assert_array_equal(lab, labels - 1)
+    assert lab.dtype == np.int32
+
+
+def test_npz_missing_dir_raises(tmp_path):
+    from repro.data import NpzImageTask
+
+    with pytest.raises(FileNotFoundError):
+        NpzImageTask(str(tmp_path / "nope"), global_batch=8)
+
+
+def test_resolve_image_task(demo_dir, monkeypatch):
+    from repro.data import NpzImageTask, resolve_image_task
+    from repro.data.synthetic import ImageTask
+
+    monkeypatch.delenv("REPRO_DATA_DIR", raising=False)
+    t, tag = resolve_image_task(8)
+    assert isinstance(t, ImageTask) and tag == "synthetic"
+    t, tag = resolve_image_task(8, data_dir=demo_dir)
+    assert isinstance(t, NpzImageTask) and tag.startswith("real:")
+    monkeypatch.setenv("REPRO_DATA_DIR", demo_dir)
+    t, tag = resolve_image_task(8)
+    assert isinstance(t, NpzImageTask)
+    t, tag = resolve_image_task(8, synthetic=True)  # forced fallback
+    assert isinstance(t, ImageTask) and tag == "synthetic"
